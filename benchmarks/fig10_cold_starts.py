@@ -1,0 +1,28 @@
+"""Figure 10: cold-start mitigation — Shabari's scheduler must roughly
+halve the fraction of invocations with cold starts vs the same
+allocator on the default (OpenWhisk-style) scheduler."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import duration_s, emit
+from repro.serving.experiment import run_experiment
+
+
+def run() -> None:
+    vals = {}
+    for name in ("shabari", "shabari-openwhisk-sched", "parrotfish",
+                 "static-large"):
+        t0 = time.perf_counter()
+        r = run_experiment(name, rps=6.0, duration_s=duration_s(), seed=0)
+        vals[name] = r.summary
+        emit(f"fig10_{name}", (time.perf_counter() - t0) * 1e6,
+             f"cold_start_pct={r.summary['cold_start_pct']:.2f};"
+             f"viol_with_cold_pct={r.summary['cold_viol_pct']:.2f};"
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f}")
+    red = 100.0 * (
+        vals["shabari-openwhisk-sched"]["cold_start_pct"]
+        - vals["shabari"]["cold_start_pct"]
+    ) / max(vals["shabari-openwhisk-sched"]["cold_start_pct"], 1e-9)
+    emit("fig10_headline", 0.0, f"cold_start_reduction_vs_default_sched_pct={red:.1f}")

@@ -1,0 +1,59 @@
+"""Figures 11-13: sensitivity studies.
+
+* Fig 11 — vCPU oversubscription limit sweep at RPS 6: above the
+  physical core count violations stop improving and timeouts appear.
+* Fig 12 — confidence-threshold sweeps: higher memory confidence cuts
+  OOM kills (<1% at 20); higher vCPU confidence does NOT keep helping.
+* Fig 13 — SLO multiplier sweep: stricter SLOs violate more, but median
+  idle vCPUs stay flat (no panic over-allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.util import QUICK, duration_s, emit
+from repro.serving.experiment import run_experiment
+from repro.serving.simulator import SimConfig
+
+
+def run() -> None:
+    # --- Fig 11: oversubscription limit -----------------------------------
+    limits = (60, 90, 130) if QUICK else (45, 60, 90, 110, 130)
+    for lim in limits:
+        t0 = time.perf_counter()
+        r = run_experiment(
+            "shabari", rps=6.0, duration_s=duration_s(), seed=0,
+            sim_cfg=SimConfig(seed=0, vcpu_limit=lim),
+        )
+        emit(f"fig11_limit{lim}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f};"
+             f"timeout_pct={r.summary['timeout_pct']:.2f}")
+
+    # --- Fig 12: confidence thresholds -------------------------------------
+    vconfs = (5, 10, 20) if QUICK else (3, 5, 10, 16, 24)
+    for vc in vconfs:
+        t0 = time.perf_counter()
+        r = run_experiment("shabari", rps=5.0, duration_s=duration_s(),
+                           seed=0, vcpu_confidence=vc)
+        emit(f"fig12a_vconf{vc}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f}")
+    mconfs = (5, 20) if QUICK else (5, 10, 20, 30)
+    for mc in mconfs:
+        t0 = time.perf_counter()
+        r = run_experiment("shabari", rps=5.0, duration_s=duration_s(),
+                           seed=0, mem_confidence=mc)
+        emit(f"fig12b_mconf{mc}", (time.perf_counter() - t0) * 1e6,
+             f"oom_killed_pct={r.summary['oom_pct']:.2f}")
+
+    # --- Fig 13: SLO multiplier --------------------------------------------
+    mults = (1.2, 1.4, 1.8) if QUICK else (1.2, 1.4, 1.6, 1.8)
+    for mult in mults:
+        t0 = time.perf_counter()
+        r = run_experiment("shabari", rps=5.0, duration_s=duration_s(),
+                           seed=0, slo_multiplier=mult)
+        emit(f"fig13_slo{mult}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f};"
+             f"idle_vcpus_p50={r.summary['wasted_vcpus_p50']:.2f};"
+             f"idle_vcpus_p95={r.summary['wasted_vcpus_p95']:.2f}")

@@ -1,0 +1,25 @@
+"""Figure 6: ML formulation study — per-function vs one-hot vs
+per-input-type agents. Per-function must win on BOTH SLO compliance and
+idle-vCPU waste (one-hot p90 idle ~5x worse in the paper)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.util import duration_s, emit
+from repro.serving.experiment import run_experiment
+
+
+def run() -> None:
+    for mode in ("shabari", "shabari-one-hot", "shabari-per-input-type"):
+        t0 = time.perf_counter()
+        r = run_experiment(mode, rps=5.0, duration_s=duration_s(), seed=0,
+                           keep_results=True)
+        wasted = np.array([x.wasted_vcpus for x in r.results])
+        p90 = float(np.percentile(wasted, 90)) if wasted.size else 0.0
+        emit(f"fig6_{mode}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f};"
+             f"idle_vcpus_p90={p90:.2f};"
+             f"idle_vcpus_p50={r.summary['wasted_vcpus_p50']:.2f}")

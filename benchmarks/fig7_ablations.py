@@ -1,0 +1,24 @@
+"""Figure 7: (a) Absolute vs Proportional cost function; (b) hashing vs
+Hermod-style packing placement. Absolute and hashing must win at load."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import duration_s, emit
+from repro.serving.experiment import run_experiment
+
+
+def run() -> None:
+    for name in ("shabari", "shabari-proportional"):
+        t0 = time.perf_counter()
+        r = run_experiment(name, rps=6.0, duration_s=duration_s(), seed=0)
+        emit(f"fig7a_{name}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f};"
+             f"wasted_vcpus_p95={r.summary['wasted_vcpus_p95']:.2f}")
+    for name in ("shabari", "shabari-packing"):
+        t0 = time.perf_counter()
+        r = run_experiment(name, rps=6.0, duration_s=duration_s(), seed=0)
+        emit(f"fig7b_{name}", (time.perf_counter() - t0) * 1e6,
+             f"slo_viol_pct={r.summary['slo_violation_pct']:.2f};"
+             f"cold_start_pct={r.summary['cold_start_pct']:.2f}")

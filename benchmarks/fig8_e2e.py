@@ -1,0 +1,51 @@
+"""Figure 8: end-to-end comparison against all five baselines across
+RPS 2-6 — % SLO violations, wasted vCPUs/memory, utilization.
+
+The headline claims validated here (recorded in EXPERIMENTS.md §Repro):
+Shabari reduces SLO violations by 11-73% vs the state-of-the-art
+baselines at load, with ~0 median wasted vCPUs and 64-94% less median
+wasted memory."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import duration_s, emit, rps_list
+from repro.serving.experiment import run_experiment
+
+POLICIES = ("static-medium", "static-large", "parrotfish", "aquatope",
+            "cypress", "shabari")
+
+
+def run() -> None:
+    shabari = {}
+    base_viol = {}
+    for rps in rps_list():
+        for pol in POLICIES:
+            t0 = time.perf_counter()
+            r = run_experiment(pol, rps=rps, duration_s=duration_s(), seed=0)
+            s = r.summary
+            emit(f"fig8_{pol}_rps{rps:g}", (time.perf_counter() - t0) * 1e6,
+                 f"slo_viol_pct={s['slo_violation_pct']:.2f};"
+                 f"wasted_vcpus_p50={s['wasted_vcpus_p50']:.2f};"
+                 f"wasted_vcpus_p95={s['wasted_vcpus_p95']:.2f};"
+                 f"wasted_mem_p50={s['wasted_mem_mb_p50']:.0f};"
+                 f"cpu_util_p50={s['cpu_util_p50']:.3f};"
+                 f"mem_util_p50={s['mem_util_p50']:.3f};"
+                 f"oom_pct={s['oom_pct']:.2f}")
+            if pol == "shabari":
+                shabari[rps] = s
+            else:
+                base_viol.setdefault(rps, {})[pol] = s
+
+    # headline reductions at the highest load
+    top = max(shabari)
+    sv = shabari[top]["slo_violation_pct"]
+    for pol, s in base_viol[top].items():
+        bv = s["slo_violation_pct"]
+        red = 100.0 * (bv - sv) / bv if bv > 0 else 0.0
+        memred = 100.0 * (
+            s["wasted_mem_mb_p50"] - shabari[top]["wasted_mem_mb_p50"]
+        ) / max(s["wasted_mem_mb_p50"], 1e-9)
+        emit(f"fig8_headline_vs_{pol}", 0.0,
+             f"slo_viol_reduction_pct={red:.1f};wasted_mem_reduction_pct={memred:.1f}")

@@ -1,0 +1,35 @@
+"""Figure 9: allocation timeline for one input of a multi-threaded
+(matmult) vs single-threaded (sentiment) function. Shabari must explore
+allocations for matmult but keep sentiment pinned near 1 vCPU even when
+its SLO is violated (it learns more vCPUs cannot help)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.util import duration_s, emit
+from repro.serving.experiment import run_experiment
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    r = run_experiment("shabari", rps=5.0, duration_s=duration_s(), seed=0,
+                       keep_results=True)
+    for fn in ("matmult", "sentiment"):
+        res = sorted(
+            (x for x in r.results if x.function == fn),
+            key=lambda x: x.arrival_t,
+        )
+        if not res:
+            emit(f"fig9_{fn}", 0.0, "n=0")
+            continue
+        allocs = [x.alloc_vcpus for x in res]
+        unique = len(set(allocs))
+        tail = allocs[len(allocs) // 2:]
+        emit(f"fig9_{fn}", (time.perf_counter() - t0) * 1e6,
+             f"n={len(res)};unique_vcpu_allocs={unique};"
+             f"second_half_mean_alloc={np.mean(tail):.2f};"
+             f"second_half_max_alloc={max(tail)};"
+             f"viol_pct={100*sum(x.slo_violated for x in res)/len(res):.1f}")

@@ -1,0 +1,80 @@
+"""Figures 1-4: the measurement study driving Shabari's design.
+
+* Fig 1a/2: input size vs execution time per vCPU allocation — positive
+  correlation but NOT consistently linear (imageprocess, compress).
+* Fig 1b/3: videoprocess utilization vs size — same-size inputs differ
+  ~70% in vCPUs used depending on RESOLUTION; memory moves inversely.
+* Fig 4: execution time & vCPU utilization vs allocation — bounded
+  parallelism (compress/resnet scale then plateau; imageprocess pinned
+  at 1 vCPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.util import emit, time_us
+from repro.serving.profiles import build_input_pool, build_profiles
+
+
+def run() -> None:
+    profiles = build_profiles()
+    pool = build_input_pool()
+    rng = np.random.default_rng(0)
+
+    # --- Fig 2: nonlinearity of size->time -------------------------------
+    t0 = time.perf_counter()
+    for fn in ("imageprocess", "compress", "matmult"):
+        prof = profiles[fn]
+        metas = pool[fn]
+        sizes = np.array([
+            m.get("file_size", m.get("rows", 0.0)) for m in metas
+        ])
+        times = np.array([
+            np.median([prof.exec_time(m, 16, rng) for _ in range(8)])
+            for m in metas
+        ])
+        # linearity: R^2 of a linear fit in size
+        A = np.vstack([sizes, np.ones_like(sizes)]).T
+        coef, res, *_ = np.linalg.lstsq(A, times, rcond=None)
+        ss_tot = np.sum((times - times.mean()) ** 2)
+        r2 = 1.0 - (res[0] / ss_tot if len(res) else 0.0)
+        corr = np.corrcoef(sizes, times)[0, 1]
+        # Fig 2c: execution-time variability at the largest input
+        big = metas[-1]
+        reps = np.array([prof.exec_time(big, 16, rng) for _ in range(30)])
+        var_pct = 100.0 * (reps.max() - reps.min()) / reps.min()
+        emit(f"fig2_{fn}", (time.perf_counter() - t0) * 1e6,
+             f"size_time_corr={corr:.3f};linear_r2={r2:.3f};"
+             f"variability_at_max_pct={var_pct:.0f}")
+
+    # --- Fig 3: videoprocess resolution effect ----------------------------
+    prof = profiles["videoprocess"]
+    by_res = {}
+    for m in pool["videoprocess"]:
+        by_res.setdefault((m["width"], m["height"]), []).append(m)
+    lo = min(by_res)
+    hi = max(by_res)
+    v_lo = np.mean([prof.vcpus_used(m, 48) for m in by_res[lo]])
+    v_hi = np.mean([prof.vcpus_used(m, 48) for m in by_res[hi]])
+    m_lo = np.mean([prof.mem_used_mb(m) for m in by_res[lo]])
+    m_hi = np.mean([prof.mem_used_mb(m) for m in by_res[hi]])
+    emit("fig3_videoprocess", 0.0,
+         f"vcpus_lowres={v_lo:.1f};vcpus_hires={v_hi:.1f};"
+         f"vcpu_delta_pct={100*(v_lo-v_hi)/max(v_lo,1e-9):.0f};"
+         f"mem_lowres={m_lo:.0f};mem_hires={m_hi:.0f}")
+
+    # --- Fig 4: bounded parallelism ---------------------------------------
+    for fn in ("compress", "resnet50", "imageprocess"):
+        prof = profiles[fn]
+        meta = pool[fn][-1]
+        ts = {v: float(np.median([prof.exec_time(meta, v, rng)
+                                  for _ in range(8)]))
+              for v in (1, 4, 16, 32)}
+        used = {v: prof.vcpus_used(meta, v) for v in (1, 4, 16, 32)}
+        speedup = ts[1] / ts[32]
+        emit(f"fig4_{fn}", 0.0,
+             f"speedup_1to32={speedup:.2f};used@32={used[32]:.1f};"
+             f"t1={ts[1]:.2f}s;t32={ts[32]:.2f}s")

@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks: reference-path CPU timings (what the engine
+actually runs in this container) + interpret-mode kernel/oracle parity.
+
+Wall-clock TPU kernel timing is impossible here (interpret mode executes
+the kernel body in Python); the TPU-side performance story lives in the
+roofline analysis (EXPERIMENTS.md §Roofline). What this records:
+us_per_call of the jnp reference ops on CPU, and derived max-abs-err of
+each Pallas kernel against its oracle on a production-relevant shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import emit, time_us
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # flash attention, prefill-like shape
+    B, S, H, Hkv, D = 1, 1024, 8, 2, 128
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.bfloat16)
+    fref = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    fref(q, k, v).block_until_ready()
+    t = time_us(lambda: fref(q, k, v).block_until_ready(), iters=5)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=256, block_kv=256)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - fref(q, k, v).astype(jnp.float32))))
+    emit("kernel_flash_attention", t, f"ref_cpu;max_err_vs_oracle={err:.1e}")
+
+    # decode attention, 8k window
+    from repro.models.kv_cache import ring_positions, ring_valid
+    B, W, H, Hkv, D = 4, 8192, 32, 8, 128
+    q1 = jax.random.normal(ks[3], (B, 1, H, D), jnp.bfloat16)
+    kc = jax.random.normal(ks[4], (B, W, Hkv, D), jnp.bfloat16)
+    vc = jax.random.normal(ks[5], (B, W, Hkv, D), jnp.bfloat16)
+    pos = jnp.full((B,), W + 5, jnp.int32)
+    kvp, kvv = ring_positions(pos, W), ring_valid(pos, W)
+    dref = jax.jit(ref.decode_attention_ref)
+    dref(q1, kc, vc, kvp, kvv, pos).block_until_ready()
+    t = time_us(lambda: dref(q1, kc, vc, kvp, kvv, pos).block_until_ready(), iters=5)
+    out = ops.decode_attention(q1, kc, vc, kvp, kvv, pos, block_kv=1024)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - dref(q1, kc, vc, kvp, kvv, pos).astype(jnp.float32))))
+    emit("kernel_decode_attention", t, f"ref_cpu;max_err_vs_oracle={err:.1e}")
+
+    # ssd scan, mamba2-1.3b layer shape
+    B, S, H, P, N, Q = 2, 1024, 16, 64, 128, 256
+    x = jax.random.normal(ks[6], (B, S, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(key, (H,)) * 0.3)
+    B_ = jax.random.normal(ks[0], (B, S, N)) * 0.5
+    C_ = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    sref = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=Q))
+    sref(x, dt, A, B_, C_)[0].block_until_ready()
+    t = time_us(lambda: sref(x, dt, A, B_, C_)[0].block_until_ready(), iters=5)
+    y, _ = ops.ssd_scan(x, dt, A, B_, C_, Q)
+    err = float(jnp.max(jnp.abs(y - sref(x, dt, A, B_, C_)[0])))
+    emit("kernel_ssd_scan", t, f"ref_cpu;max_err_vs_oracle={err:.1e}")
+
+    # moe grouped matmul, mixtral-like per-device shard
+    E, C, D2, F = 8, 256, 512, 1792
+    buf = jax.random.normal(ks[2], (E, C, D2), jnp.bfloat16)
+    w = jax.random.normal(ks[3], (E, D2, F), jnp.bfloat16) * (D2 ** -0.5)
+    gref = jax.jit(ref.moe_gmm_ref)
+    gref(buf, w).block_until_ready()
+    t = time_us(lambda: gref(buf, w).block_until_ready(), iters=5)
+    out = ops.moe_gmm(buf, w, block_c=128, block_d=256, block_f=256)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - gref(buf, w).astype(jnp.float32))))
+    emit("kernel_moe_gmm", t, f"ref_cpu;max_err_vs_oracle={err:.1e}")

@@ -1,0 +1,32 @@
+"""Roofline table (deliverable g): reads the dry-run JSON artifacts and
+emits one CSV row per (arch x shape x mesh) with the three roofline
+terms, the dominant bottleneck, and the useful-FLOPs ratio."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.util import emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def run() -> None:
+    files = sorted(DRYRUN_DIR.glob("*.json")) if DRYRUN_DIR.exists() else []
+    if not files:
+        emit("roofline_report", 0.0, "no_dryrun_artifacts_found_run_dryrun_first")
+        return
+    for f in files:
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            emit(f"roofline_{f.stem}", 0.0, f"skipped={rec['reason']}")
+            continue
+        r = rec["roofline"]
+        emit(
+            f"roofline_{f.stem}",
+            rec.get("compile_s", 0.0) * 1e6,
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f}",
+        )

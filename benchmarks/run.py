@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_QUICK=1 for the
+abbreviated sweep (shorter traces, fewer grid points).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig8,table3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("measurement", "benchmarks.fig_measurement_study"),
+    ("fig6", "benchmarks.fig6_formulations"),
+    ("fig7", "benchmarks.fig7_ablations"),
+    ("fig8", "benchmarks.fig8_e2e"),
+    ("fig9", "benchmarks.fig9_timeline"),
+    ("fig10", "benchmarks.fig10_cold_starts"),
+    ("fig11_13", "benchmarks.fig11_13_sensitivity"),
+    ("fig14", "benchmarks.fig14_overheads"),
+    ("table3", "benchmarks.table3_container_sizes"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of module keys")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+            print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures.append((key, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

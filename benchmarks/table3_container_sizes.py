@@ -1,0 +1,24 @@
+"""Table 3: number of unique container sizes Shabari creates per
+function across RPS — low/stable for single-threaded functions, growing
+with load for multi-threaded ones (exploration)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import QUICK, duration_s, emit
+from repro.serving.experiment import run_experiment
+
+FNS = ("matmult", "encrypt", "linpack", "imageprocess", "sentiment",
+       "mobilenet", "videoprocess", "lrtrain")
+
+
+def run() -> None:
+    rps_values = (3.0, 6.0) if QUICK else (2.0, 4.0, 6.0)
+    for rps in rps_values:
+        t0 = time.perf_counter()
+        r = run_experiment("shabari", rps=rps, duration_s=duration_s(), seed=0)
+        parts = ";".join(
+            f"{fn}={r.container_sizes.get(fn, 0)}" for fn in FNS
+        )
+        emit(f"table3_rps{rps:g}", (time.perf_counter() - t0) * 1e6, parts)

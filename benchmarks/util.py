@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Iterable, List
+
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line)
+    return line
+
+
+def time_us(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def duration_s() -> float:
+    return 240.0 if QUICK else 600.0
+
+
+def rps_list() -> List[float]:
+    return [3.0, 6.0] if QUICK else [2.0, 3.0, 4.0, 5.0, 6.0]

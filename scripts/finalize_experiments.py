@@ -1,0 +1,46 @@
+"""Regenerate the roofline tables inside EXPERIMENTS.md from the
+dry-run artifacts. Idempotent: content between the marker comments is
+replaced."""
+
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "scripts")
+from roofline_table import build_table  # noqa: E402
+
+MARK = "<!-- {name}:{which} -->"
+
+
+def splice(text: str, name: str, payload: str) -> str:
+    start = MARK.format(name=name, which="start")
+    end = MARK.format(name=name, which="end")
+    block = f"{start}\n{payload}\n{end}"
+    if start in text:
+        pattern = re.escape(start) + r".*?" + re.escape(end)
+        return re.sub(pattern, lambda _: block, text, flags=re.S)
+    return text + "\n\n" + block + "\n"
+
+
+def main():
+    d = Path("experiments/dryrun")
+    md = Path("EXPERIMENTS.md")
+    text = md.read_text()
+
+    sections = [
+        ("roofline-pod1", "### Baseline roofline — single-pod 16×16 (256 chips)",
+         build_table(d, "pod1")),
+        ("roofline-pod2", "### Multi-pod 2×16×16 (512 chips) — dry-run pass",
+         build_table(d, "pod2")),
+        ("roofline-opt", "### Optimized (--opt: §Perf winners) — single-pod",
+         build_table(d, "pod1_opt")),
+    ]
+    for name, title, table in sections:
+        payload = f"{title}\n\n{table}"
+        text = splice(text, name, payload)
+    md.write_text(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Generate the §Roofline markdown table from experiments/dryrun/*.json.
+
+Usage: python scripts/roofline_table.py [--dir experiments/dryrun] [--suffix pod1]
+Prints a markdown table; with --update, rewrites the marked block in
+EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+ARCH_ORDER = [
+    "qwen2.5-3b", "mixtral-8x7b", "nemotron-4-15b", "internvl2-76b",
+    "mamba2-1.3b", "arctic-480b", "codeqwen1.5-7b", "whisper-tiny",
+    "zamba2-7b", "phi3-mini-3.8b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, digits=4):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.{digits}f}"
+
+
+def build_table(d: Path, suffix: str) -> str:
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = d / f"{arch.replace('.', '_')}__{shape}__{suffix}.json"
+            if not f.exists():
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | MISSING |")
+                continue
+            r = json.loads(f.read_text())
+            if r.get("skipped"):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | skipped: {r['reason']} |")
+                continue
+            rf = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            arg_gb = (mem.get("argument_bytes") or 0) / 2**30
+            tmp_gb = (mem.get("temp_bytes") or 0) / 2**30
+            rows.append(
+                f"| {arch} | {shape} | {fmt(rf['compute_s'])} | "
+                f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+                f"**{rf['dominant']}** | {rf['useful_flops_ratio']:.3f} | "
+                f"args {arg_gb:.2f} GiB, temp {tmp_gb:.2f} GiB |"
+            )
+    header = (
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful | per-device memory |\n"
+        "|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--suffix", default="pod1")
+    args = ap.parse_args()
+    print(build_table(Path(args.dir), args.suffix))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Dev check: prefill+decode logits == full-sequence forward logits.
+
+MoE capacity dropping makes token-competition non-causal (GShard
+semantics), so we raise CAPACITY_FACTOR to drop-free for this check.
+"""
+import jax
+import jax.numpy as jnp
+
+import repro.models.moe as MOE
+
+MOE.CAPACITY_FACTOR = 16.0  # drop-free for exact equivalence
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models.model import forward_seq, forward_prefill, forward_decode, init_params
+
+key = jax.random.PRNGKey(1)
+fails = 0
+for arch in ARCH_IDS:
+    cfg = get_reduced_config(arch)
+    params = init_params(key, cfg)
+    B, S = 2, 17
+    if cfg.family in ("ssm", "hybrid"):
+        S = cfg.ssm_chunk
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patch_embeds"] = 0.1 * jnp.ones((B, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+    if cfg.is_encoder_decoder:
+        kwargs["frame_embeds"] = 0.1 * jnp.ones((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+
+    off0 = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    _, cache = forward_prefill(params, cfg, tokens[:, :S], cache_window=max(S + off0, 8), **kwargs)
+    logits_dec, _ = forward_decode(params, cfg, tokens[:, S], cache)
+
+    if cfg.family in ("ssm", "hybrid"):
+        pad = (-(S + 1)) % cfg.ssm_chunk
+        toks_full = jnp.pad(tokens, ((0, 0), (0, pad)))
+    else:
+        toks_full = tokens
+    logits_full, _, _ = forward_seq(params, cfg, toks_full, **kwargs)
+    off = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    ref = logits_full[:, off + S]
+    err = float(jnp.max(jnp.abs(ref.astype(jnp.float32) - logits_dec.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+    ok = err / scale < 0.02
+    fails += 0 if ok else 1
+    print(f"{'OK ' if ok else 'FAIL'} {arch:20s} max_abs_err={err:.5f} rel={err/scale:.5f}")
+raise SystemExit(1 if fails else 0)

@@ -1,0 +1,30 @@
+"""Quick dev smoke: fwd train/prefill/decode for every reduced arch."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models.model import forward_train, forward_prefill, forward_decode, init_params, count_params
+
+key = jax.random.PRNGKey(0)
+for arch in ARCH_IDS:
+    cfg = get_reduced_config(arch)
+    params = init_params(key, cfg)
+    B, S = 2, 64
+    if cfg.is_encoder_decoder:
+        S = min(S, cfg.max_target_positions)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patch_embeds"] = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+    if cfg.is_encoder_decoder:
+        kwargs["frame_embeds"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    loss, metrics = forward_train(params, cfg, tokens, labels, remat=False, **kwargs)
+    assert jnp.isfinite(loss), (arch, loss)
+    logits, cache = forward_prefill(params, cfg, tokens, cache_window=32, **kwargs)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = forward_decode(params, cfg, tok, cache)
+    assert jnp.all(jnp.isfinite(logits2.astype(jnp.float32))), arch
+    print(f"{arch:20s} params={count_params(params):>12,} loss={float(loss):.3f} ok")
+print("ALL OK")

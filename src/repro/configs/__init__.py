@@ -1,0 +1,98 @@
+"""Config registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full production config;
+``get_reduced_config(arch_id)`` returns the CPU-smoke-testable variant of
+the same family (<=2 layers, d_model<=512, <=4 experts).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    cache_specs,
+    decoder_seq_len,
+    effective_decode_window,
+    input_specs,
+    shape_applicable,
+)
+
+ARCH_IDS: List[str] = [
+    "qwen2_5_3b",
+    "mixtral_8x7b",
+    "nemotron_4_15b",
+    "internvl2_76b",
+    "mamba2_1_3b",
+    "arctic_480b",
+    "codeqwen1_5_7b",
+    "whisper_tiny",
+    "zamba2_7b",
+    "phi3_mini_3_8b",
+]
+
+# CLI ids with dashes/dots map onto module names.
+_ALIASES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "arctic-480b": "arctic_480b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "whisper-tiny": "whisper_tiny",
+    "zamba2-7b": "zamba2_7b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+}
+
+
+def canonical_id(arch: str) -> str:
+    return _ALIASES.get(arch, arch)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_id(arch)}")
+    cfg: ModelConfig = mod.config()
+    cfg.validate()
+    return cfg
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_id(arch)}")
+    cfg: ModelConfig = mod.reduced_config()
+    cfg.validate()
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "get_config",
+    "get_reduced_config",
+    "all_configs",
+    "canonical_id",
+    "input_specs",
+    "cache_specs",
+    "shape_applicable",
+    "effective_decode_window",
+    "decoder_seq_len",
+]

@@ -1,0 +1,241 @@
+"""Configuration system for the repro framework.
+
+Two families of config live here:
+
+* :class:`ModelConfig` — a full architectural description of one of the
+  assigned architectures (or a reduced smoke variant of the same family).
+* :class:`ShapeConfig` — one of the four assigned input shapes
+  (train_4k / prefill_32k / decode_32k / long_500k).
+
+``input_specs(model_cfg, shape_cfg)`` produces ``jax.ShapeDtypeStruct``
+stand-ins for every input of the step function that the shape lowers
+(``train_step`` for training shapes, ``serve_step`` for decode shapes),
+so the multi-pod dry-run can ``.lower().compile()`` without allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per assigned architecture."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str  # citation for the config (paper / model card)
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # --- MLP / activation ---------------------------------------------------
+    mlp_type: str = "swiglu"  # swiglu | squared_relu
+    # --- attention ----------------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # native SWA (mixtral)
+    # Window used only for the long_500k sub-quadratic dense variant.
+    long_context_window: int = 8192
+    supports_long_context: bool = True  # whisper sets False
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2 / zamba2) ----------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # --- hybrid (zamba2): one shared attention block applied every N layers --
+    attn_every: int = 0
+    # --- encoder-decoder (whisper) --------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # audio frames after the (stubbed) conv frontend
+    max_target_positions: int = 0  # whisper decoder positional cap
+    # --- vlm frontend stub ----------------------------------------------------
+    frontend_tokens: int = 0  # precomputed patch embeddings prepended to text
+    # --- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+
+    # ----------------------------------------------------------------- helpers
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact for our implementation)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+    def validate(self) -> None:
+        if self.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            assert self.num_heads > 0 and self.head_dim > 0
+            assert self.num_heads % self.num_kv_heads == 0, self.name
+        if self.family in ("moe",):
+            assert self.num_experts > 1 and self.experts_per_token >= 1
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0
+            assert self.d_inner % self.ssm_head_dim == 0
+        if self.family == "audio":
+            assert self.is_encoder_decoder
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned (seq_len, global_batch) input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: Dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Whether (arch, shape) is runnable (see DESIGN.md §4 for skips)."""
+    if shape.name == "long_500k":
+        # Needs sub-quadratic attention. SSM/hybrid are native; SWA archs
+        # are native; pure-dense archs use the explicit sliding-window
+        # variant (supports_long_context). whisper opts out (448-pos cap).
+        return cfg.supports_long_context
+    return True
+
+
+def effective_decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV entries actually cached at decode time for (arch, shape).
+
+    Full-attention archs cache the whole context for decode_32k; for
+    long_500k every attention arch runs windowed (native SWA window or the
+    long-context variant window). SSM layers never appear here.
+    """
+    if not cfg.uses_attention:
+        return 0
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, shape.seq_len)
+    if shape.name == "long_500k":
+        return min(cfg.long_context_window, shape.seq_len)
+    if cfg.is_encoder_decoder and cfg.max_target_positions:
+        return min(cfg.max_target_positions, shape.seq_len)
+    return shape.seq_len
+
+
+def decoder_seq_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sequence length seen by the decoder (whisper caps at 448)."""
+    if cfg.is_encoder_decoder and cfg.max_target_positions:
+        return min(cfg.max_target_positions, shape.seq_len)
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the step the
+    shape lowers. Keys match the keyword arguments of the step functions in
+    ``repro.launch``. No device allocation happens here.
+    """
+    B = shape.global_batch
+    S = decoder_seq_len(cfg, shape)
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        text = S - cfg.frontend_tokens if cfg.family == "vlm" else S
+        specs["tokens"] = _sds((B, text), i32)
+        specs["labels"] = _sds((B, text), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model), dt)
+        if cfg.is_encoder_decoder:
+            specs["frame_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    elif shape.kind == "prefill":
+        text = S - cfg.frontend_tokens if cfg.family == "vlm" else S
+        specs["tokens"] = _sds((B, text), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model), dt)
+        if cfg.is_encoder_decoder:
+            specs["frame_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    elif shape.kind == "decode":
+        specs["token"] = _sds((B,), i32)
+        specs["cache"] = cache_specs(cfg, shape)
+        if cfg.is_encoder_decoder:
+            # Cross-attention reads encoder output kept in the cache specs.
+            pass
+    else:  # pragma: no cover
+        raise ValueError(shape.kind)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the decode cache pytree (KV and/or SSM state)."""
+    from repro.models.kv_cache import cache_shapes
+
+    shapes = cache_shapes(cfg, shape)
+    return jax.tree_util.tree_map(
+        lambda sd: _sds(sd[0], sd[1]), shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )

@@ -1,0 +1,46 @@
+"""InternVL2-76B — VLM: InternViT frontend (stub) + Llama3-70B-class backbone.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256. [arXiv:2404.16821]
+
+The vision encoder + projector are a STUB per the assignment: ``input_specs``
+provides precomputed patch embeddings (frontend_tokens x d_model) that the
+language transformer consumes alongside text tokens.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        source="arXiv:2404.16821 (InternVL2; InternViT + LLM backbone)",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        mlp_type="swiglu",
+        rope_theta=500_000.0,
+        frontend_tokens=256,  # one image tile -> 256 visual tokens
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b-reduced",
+        family="vlm",
+        source="reduced smoke variant",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=1024,
+        mlp_type="swiglu",
+        rope_theta=500_000.0,
+        frontend_tokens=16,
+    )

@@ -1,0 +1,55 @@
+"""Whisper-tiny — encoder-decoder audio transformer, conv frontend stubbed.
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (1500 x d_model).
+The decoder positional embedding caps the target length at 448 tokens, so
+long_500k is skipped for this arch (DESIGN.md §4).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        family="audio",
+        source="arXiv:2212.04356 (Whisper)",
+        num_layers=4,          # decoder layers
+        d_model=384,
+        num_heads=6,
+        num_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51865,
+        mlp_type="swiglu",
+        is_encoder_decoder=True,
+        encoder_layers=4,
+        encoder_seq=1500,      # 30 s audio -> 1500 frames post-conv
+        max_target_positions=448,
+        supports_long_context=False,
+        rope_theta=10_000.0,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny-reduced",
+        family="audio",
+        source="reduced smoke variant",
+        num_layers=2,
+        d_model=128,
+        num_heads=2,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=256,
+        vocab_size=1024,
+        mlp_type="swiglu",
+        is_encoder_decoder=True,
+        encoder_layers=2,
+        encoder_seq=64,
+        max_target_positions=448,
+        supports_long_context=False,
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,57 @@
+"""Zamba2-7B — hybrid: Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+[arXiv:2411.15242]
+
+Structure follows the Zamba2 pattern: the backbone is Mamba2 blocks; a
+single SHARED attention+MLP block (one parameter set) is applied every
+``attn_every`` layers, consuming the concatenated residual stream.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        source="arXiv:2411.15242 (Zamba2)",
+        num_layers=81,
+        d_model=3584,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=112,
+        d_ff=14336,
+        vocab_size=32000,
+        mlp_type="swiglu",
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        ssm_chunk=256,
+        conv_width=4,
+        attn_every=6,  # shared attention block applied every 6 mamba layers
+        rope_theta=10_000.0,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-reduced",
+        family="hybrid",
+        source="reduced smoke variant",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=1024,
+        mlp_type="swiglu",
+        ssm_state=32,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        ssm_chunk=64,
+        conv_width=4,
+        attn_every=2,
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,28 @@
+"""Shabari core: delayed, input-aware, per-resource-type allocation.
+
+The paper's contribution (§3-§5): an online cost-sensitive multi-class
+classification agent per (function, resource type), a slack-driven cost
+function, an input featurizer, and a cold-start-aware scheduler.
+"""
+
+from repro.core.allocator import Allocation, OnlineCSC, ResourceAllocator
+from repro.core.cost_functions import (
+    absolute_vcpu_costs,
+    memory_costs,
+    proportional_vcpu_costs,
+)
+from repro.core.featurizer import Featurizer
+from repro.core.metadata_store import MetadataStore
+from repro.core.scheduler import ShabariScheduler
+
+__all__ = [
+    "OnlineCSC",
+    "ResourceAllocator",
+    "Allocation",
+    "Featurizer",
+    "ShabariScheduler",
+    "MetadataStore",
+    "absolute_vcpu_costs",
+    "proportional_vcpu_costs",
+    "memory_costs",
+]

@@ -1,0 +1,121 @@
+"""Cluster model: workers, containers, capacity tracking.
+
+Mirrors the paper's testbed (§7.1): 16 invoker workers x 90 vCPUs x
+125 GB, plus the decoupled-resource bookkeeping Shabari's scheduler
+needs — per-worker aggregate vCPU AND memory of active invocations
+(OpenWhisk tracks only memory, which is what oversubscribes vCPUs
+under static-large, Figure 8a).
+
+Containers are (function, vcpus, mem) slots. Idle warm containers hold
+no load (§5 "while idle, containers do not consume vCPU or memory") —
+only RUNNING invocations count against worker capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+_container_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Container:
+    cid: int
+    function: str
+    vcpus: int
+    mem_mb: int
+    worker: "Worker"
+    busy: bool = False
+    created_at: float = 0.0
+    last_used: float = 0.0
+    warm_at: float = 0.0  # when the cold start finishes
+
+    def size_key(self) -> Tuple[int, int]:
+        return (self.vcpus, self.mem_mb)
+
+
+@dataclasses.dataclass
+class Worker:
+    wid: int
+    total_vcpus: int = 90
+    total_mem_mb: int = 125 * 1024
+    # oversubscription limit (userCPU hyperparameter, §6/§7.5)
+    vcpu_limit: int = 90
+    used_vcpus: int = 0
+    used_mem_mb: int = 0
+    containers: Dict[int, Container] = dataclasses.field(default_factory=dict)
+
+    def fits(self, vcpus: int, mem_mb: int) -> bool:
+        return (
+            self.used_vcpus + vcpus <= self.vcpu_limit
+            and self.used_mem_mb + mem_mb <= self.total_mem_mb
+        )
+
+    def acquire(self, vcpus: int, mem_mb: int) -> None:
+        self.used_vcpus += vcpus
+        self.used_mem_mb += mem_mb
+
+    def release(self, vcpus: int, mem_mb: int) -> None:
+        self.used_vcpus -= vcpus
+        self.used_mem_mb -= mem_mb
+        assert self.used_vcpus >= 0 and self.used_mem_mb >= 0
+
+    def idle_warm(self, function: str, now: float) -> List[Container]:
+        return [
+            c
+            for c in self.containers.values()
+            if c.function == function and not c.busy and c.warm_at <= now
+        ]
+
+
+class Cluster:
+    def __init__(
+        self,
+        n_workers: int = 16,
+        vcpus_per_worker: int = 90,
+        mem_mb_per_worker: int = 125 * 1024,
+        vcpu_limit: Optional[int] = None,
+    ):
+        self.workers = [
+            Worker(
+                wid=i,
+                total_vcpus=vcpus_per_worker,
+                total_mem_mb=mem_mb_per_worker,
+                vcpu_limit=vcpu_limit or vcpus_per_worker,
+            )
+            for i in range(n_workers)
+        ]
+
+    def new_container(
+        self, worker: Worker, function: str, vcpus: int, mem_mb: int,
+        now: float, warm_at: float,
+    ) -> Container:
+        c = Container(
+            cid=next(_container_ids),
+            function=function,
+            vcpus=vcpus,
+            mem_mb=mem_mb,
+            worker=worker,
+            created_at=now,
+            last_used=now,
+            warm_at=warm_at,
+        )
+        worker.containers[c.cid] = c
+        return c
+
+    def remove_container(self, c: Container) -> None:
+        c.worker.containers.pop(c.cid, None)
+
+    def idle_warm(self, function: str, now: float) -> List[Container]:
+        out: List[Container] = []
+        for w in self.workers:
+            out.extend(w.idle_warm(function, now))
+        return out
+
+    def total_used(self) -> Tuple[int, int]:
+        return (
+            sum(w.used_vcpus for w in self.workers),
+            sum(w.used_mem_mb for w in self.workers),
+        )

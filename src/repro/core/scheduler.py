@@ -1,0 +1,138 @@
+"""Shabari's Scheduler (paper §5).
+
+Given the Resource Allocator's (vcpus, mem) prediction for an
+invocation, decide which container/worker runs it:
+
+  1. a warm idle container of the EXACT predicted size;
+  2. else the warm idle container LARGER but closest to the prediction —
+     and proactively launch an exact-size container in the background,
+     off the critical path, for future invocations;
+  3. else cold-start an exact-size container.
+
+Cold placement hashes the function to a "home server" (cache locality,
+like OpenWhisk) and walks forward from it while workers lack capacity;
+if none fits, a random worker is chosen. A packing alternative
+(Hermod-style: fill one server before the next) is included for the
+Figure 7b ablation — it loses at high load because co-locating many
+network-hungry invocations saturates the server.
+
+Load accounting uses BOTH vCPU and memory per worker (OpenWhisk's
+memory-only policy is what oversubscribes vCPUs, §5 reason 3), with the
+``userCPU`` oversubscription limit from §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from typing import List, Optional, Tuple
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster, Container, Worker
+
+
+@dataclasses.dataclass
+class Decision:
+    container: Optional[Container]
+    cold_start: bool
+    # exact-size container to launch in the background (case 2)
+    background_launch: Optional[Tuple[Worker, int, int]]
+    queued: bool = False  # no capacity anywhere
+
+
+class ShabariScheduler:
+    def __init__(
+        self,
+        cluster: Cluster,
+        *,
+        placement: str = "hashing",  # hashing | packing (Fig. 7b)
+        keep_alive_s: float = 600.0,  # OpenWhisk default keep-alive
+        route_larger: bool = True,  # Shabari case (2); off = OpenWhisk mode
+        background_launch: bool = True,  # Shabari's proactive exact-size spawn
+        seed: int = 0,
+    ):
+        assert placement in ("hashing", "packing")
+        self.cluster = cluster
+        self.placement = placement
+        self.keep_alive_s = keep_alive_s
+        self.route_larger = route_larger
+        self.background_launch = background_launch
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------ utils
+    def _home_worker(self, function: str) -> int:
+        h = int(hashlib.md5(function.encode()).hexdigest(), 16)
+        return h % len(self.cluster.workers)
+
+    def _workers_from_home(self, function: str) -> List[Worker]:
+        ws = self.cluster.workers
+        start = self._home_worker(function)
+        return [ws[(start + i) % len(ws)] for i in range(len(ws))]
+
+    def _pick_cold_worker(self, function: str, vcpus: int, mem_mb: int) -> Optional[Worker]:
+        if self.placement == "hashing":
+            order = self._workers_from_home(function)
+        else:  # packing: most-loaded first (fill before spilling)
+            order = sorted(
+                self.cluster.workers, key=lambda w: -(w.used_vcpus + 1e-9)
+            )
+        for w in order:
+            if w.fits(vcpus, mem_mb):
+                return w
+        return None
+
+    # -------------------------------------------------------- schedule
+    def schedule(self, function: str, alloc: Allocation, now: float) -> Decision:
+        """Place one invocation. Does not mutate load — the runtime calls
+        ``start``/``finish`` as the invocation actually runs."""
+        vcpus, mem = alloc.vcpus, alloc.mem_mb
+
+        # (1) exact-size warm container whose worker has headroom
+        warm = self.cluster.idle_warm(function, now)
+        exact = [c for c in warm if c.vcpus == vcpus and c.mem_mb == mem
+                 and c.worker.fits(vcpus, mem)]
+        if exact:
+            exact.sort(key=lambda c: c.last_used)
+            return Decision(exact[0], cold_start=False, background_launch=None)
+
+        # (2) smallest strictly-larger warm container
+        if self.route_larger:
+            larger = [
+                c for c in warm
+                if c.vcpus >= vcpus and c.mem_mb >= mem
+                and c.worker.fits(c.vcpus, c.mem_mb)
+            ]
+            if larger:
+                larger.sort(key=lambda c: (c.vcpus - vcpus, c.mem_mb - mem))
+                chosen = larger[0]
+                bg = None
+                if self.background_launch:
+                    w = self._pick_cold_worker(function, vcpus, mem)
+                    if w is not None:
+                        # idle containers carry no load; free to launch now
+                        bg = (w, vcpus, mem)
+                return Decision(chosen, cold_start=False, background_launch=bg)
+
+        # (3) cold start at the exact size
+        w = self._pick_cold_worker(function, vcpus, mem)
+        if w is None:
+            w = self._rng.choice(self.cluster.workers)
+            if not w.fits(vcpus, mem):
+                return Decision(None, cold_start=True, background_launch=None,
+                                queued=True)
+        return Decision(None, cold_start=True, background_launch=(w, vcpus, mem))
+
+    # ----------------------------------------------------- lifecycle
+    def reap_idle(self, now: float) -> int:
+        """Apply the keep-alive policy; returns number reaped."""
+        reaped = 0
+        for w in self.cluster.workers:
+            dead = [
+                c for c in w.containers.values()
+                if not c.busy and now - c.last_used > self.keep_alive_s
+            ]
+            for c in dead:
+                self.cluster.remove_container(c)
+                reaped += 1
+        return reaped

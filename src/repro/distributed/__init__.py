@@ -1,0 +1,1 @@
+"""Distribution layer: sharding rules for params, optimizer state, caches."""

@@ -1,0 +1,260 @@
+"""Sharding rules: parameter/optimizer/cache/input PartitionSpecs per arch.
+
+Policy (DESIGN.md §6):
+
+* Tensor parallelism over the ``model`` axis follows Megatron pairing:
+  column-parallel in-projections (wq/wk/wv/wg/wu/in_proj), row-parallel
+  out-projections (wo/wd/out_proj) so each block needs one reduction.
+* FSDP: during training every matrix additionally shards one remaining
+  dim over the data axes (("pod","data") on the multi-pod mesh) so
+  optimizer state scales with the full chip count. Inference ("serve")
+  keeps weights model-sharded only, unless the config is too big to
+  replicate across data rows (``fsdp_serve`` — arctic/internvl2).
+* MoE experts shard over ``model`` when E divides the axis; otherwise
+  (mixtral's 8 experts on a 16-wide axis) the expert FFN dim shards.
+* Every rule is guarded by divisibility — a dim that doesn't divide the
+  axis stays unsharded rather than failing to lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# Archs whose bf16 weights cannot be replicated across data rows at serve
+# time on 16 GB chips (see DESIGN.md §6).
+FSDP_SERVE_ARCHS = {"internvl2-76b", "arctic-480b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    data_axes: Tuple[str, ...]  # ("pod","data") or ("data",)
+    model_axis: str = "model"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+
+def mesh_info(mesh: Mesh) -> MeshInfo:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a != "model")
+    return MeshInfo(mesh=mesh, data_axes=data_axes)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+class _Ruler:
+    """Builds guarded PartitionSpecs for one (config, mesh, mode)."""
+
+    def __init__(self, cfg: ModelConfig, mi: MeshInfo, mode: str):
+        assert mode in ("train", "serve")
+        self.cfg = cfg
+        self.mi = mi
+        self.mode = mode
+        self.m = mi.model_axis
+        self.dp = mi.data_axes if len(mi.data_axes) > 1 else mi.data_axes[0]
+        self.msize = mi.model_size
+        self.dsize = mi.data_size
+        self.fsdp = mode == "train" or cfg.name in FSDP_SERVE_ARCHS
+
+    def _axis(self, dim: int, axis_name, size: int):
+        return axis_name if _div(dim, size) else None
+
+    def matrix(self, shape: Tuple[int, ...], model_dim: int, fsdp_dim: int) -> P:
+        """Spec for a (possibly layer-stacked) matrix.
+
+        model_dim / fsdp_dim index into the *trailing* ndims of the
+        logical (unstacked) weight; negative indexing from the end.
+        """
+        nd = len(shape)
+        spec: list = [None] * nd
+        mdim = nd + model_dim if model_dim < 0 else model_dim
+        spec[mdim] = self._axis(shape[mdim], self.m, self.msize)
+        if self.fsdp and fsdp_dim is not None:
+            fdim = nd + fsdp_dim if fsdp_dim < 0 else fsdp_dim
+            if fdim != mdim:
+                spec[fdim] = self._axis(shape[fdim], self.dp, self.dsize)
+        return P(*spec)
+
+    def replicated(self, shape) -> P:
+        return P(*([None] * len(shape)))
+
+    def fsdp_only(self, shape: Tuple[int, ...], fsdp_dim: int) -> P:
+        """No tensor parallelism; shard one dim over data axes if FSDP."""
+        nd = len(shape)
+        spec: list = [None] * nd
+        if self.fsdp:
+            fdim = nd + fsdp_dim if fsdp_dim < 0 else fsdp_dim
+            spec[fdim] = self._axis(shape[fdim], self.dp, self.dsize)
+        return P(*spec)
+
+
+def _leaf_spec(r: _Ruler, name: str, arr) -> P:
+    """Spec for one parameter leaf by name. Stacked layer axis (leading L)
+    is handled by the rules operating on trailing dims."""
+    cfg, shape, nd = r.cfg, arr.shape, arr.ndim
+
+    if name == "wq":  # (.., D, out) column-parallel — whole heads only
+        if _div(cfg.num_heads, r.msize):
+            return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+        return r.fsdp_only(shape, fsdp_dim=-2)
+    if name in ("wk", "wv"):
+        # GQA: shard only when kv heads split evenly over the model axis;
+        # splitting inside a head (qwen kv=2 on a 16-wide axis) forces
+        # per-layer all-gathers of K/V.
+        if _div(cfg.num_kv_heads, r.msize):
+            return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+        return r.fsdp_only(shape, fsdp_dim=-2)
+    if name == "wo":  # (.., q_dim, D) row-parallel
+        if _div(cfg.num_heads, r.msize):
+            return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+        return r.fsdp_only(shape, fsdp_dim=-2)
+    if name in ("wg", "wu"):
+        if nd >= 3 and shape[-3] == cfg.num_experts and cfg.num_experts > 1:
+            # MoE experts (.., E, D, F)
+            if _div(cfg.num_experts, r.msize):
+                return r.matrix(shape, model_dim=-3, fsdp_dim=-1)
+            return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+        return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+    if name == "wd":
+        if nd >= 3 and shape[-3] == cfg.num_experts and cfg.num_experts > 1:
+            if _div(cfg.num_experts, r.msize):
+                return r.matrix(shape, model_dim=-3, fsdp_dim=-2)
+            return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+        return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+    if name == "bq":  # (.., out)
+        if _div(cfg.num_heads, r.msize):
+            return r.matrix(shape, model_dim=-1, fsdp_dim=None)
+        return r.replicated(shape)
+    if name in ("bk", "bv"):
+        if _div(cfg.num_kv_heads, r.msize):
+            return r.matrix(shape, model_dim=-1, fsdp_dim=None)
+        return r.replicated(shape)
+    if name == "router":
+        return r.replicated(shape)
+    if name == "in_proj":  # (.., D, Z) column-parallel
+        return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+    if name == "out_proj":  # (.., d_in, D) row-parallel
+        return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+    if name == "conv_w":  # (.., K, C)
+        return r.matrix(shape, model_dim=-1, fsdp_dim=None)
+    if name == "conv_b":
+        return r.matrix(shape, model_dim=-1, fsdp_dim=None)
+    if name == "embed":  # (V, D)
+        if _div(shape[-2], r.msize):
+            return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+        return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+    if name == "lm_head":  # (D, V)
+        if _div(shape[-1], r.msize):
+            return r.matrix(shape, model_dim=-1, fsdp_dim=-2)
+        return r.matrix(shape, model_dim=-2, fsdp_dim=-1)
+    if name in ("enc_pos", "dec_pos"):
+        return r.replicated(shape)
+    # norms, A_log, dt_bias, D, scalars
+    return r.replicated(shape)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, mode: str):
+    """PartitionSpec pytree matching ``init_params(cfg)``'s structure."""
+    mi = mesh_info(mesh)
+    r = _Ruler(cfg, mi, mode)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return _leaf_spec(r, path[-1], tree)
+
+    return walk
+
+
+def param_spec_tree(cfg: ModelConfig, mesh: Mesh, mode: str, params_shape):
+    """Apply the rules to a concrete params (or ShapeDtypeStruct) tree."""
+    mi = mesh_info(mesh)
+    r = _Ruler(cfg, mi, mode)
+
+    def walk(tree, name="param"):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return _leaf_spec(r, name, tree)
+
+    return walk(params_shape)
+
+
+def cache_spec_tree(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Dict[str, P]:
+    """Specs for the decode cache pytree (stacked layer leading axis)."""
+    mi = mesh_info(mesh)
+    r = _Ruler(cfg, mi, "serve")
+    dp = r.dp
+    out: Dict[str, P] = {}
+    for name, leaf in cache_shape.items():
+        shape = leaf.shape
+        if name == "pos":
+            out[name] = P(dp if _div(shape[0], r.dsize) else None)
+        elif name in ("k", "v", "xk", "xv"):
+            # (L, B, W, Hkv, hd): batch over data; kv-heads over model when
+            # divisible, else the window dim carries the model axis. When
+            # batch is unshardable (long_500k B=1) the window dim carries
+            # the data axes instead, spreading the cache pod-wide.
+            b = dp if _div(shape[1], r.dsize) else None
+            w = None if b is not None else (dp if _div(shape[2], r.dsize) else None)
+            if _div(shape[3], r.msize):
+                out[name] = P(None, b, w, r.m, None)
+            elif w is None and _div(shape[2], r.msize):
+                out[name] = P(None, b, r.m, None, None)
+            else:
+                out[name] = P(None, b, w, None, None)
+        elif name == "conv":  # (L, B, K-1, C)
+            b = dp if _div(shape[1], r.dsize) else None
+            out[name] = P(None, b, None, r.m if _div(shape[3], r.msize) else None)
+        elif name == "ssd":  # (L, B, H, P, N)
+            b = dp if _div(shape[1], r.dsize) else None
+            out[name] = P(None, b, r.m if _div(shape[2], r.msize) else None, None, None)
+        else:  # pragma: no cover
+            raise ValueError(name)
+    return out
+
+
+def input_spec_tree(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, specs) -> Dict[str, Any]:
+    """Specs for the step-function inputs produced by ``input_specs``."""
+    mi = mesh_info(mesh)
+    r = _Ruler(cfg, mi, "serve")
+    dp = r.dp
+    out: Dict[str, Any] = {}
+    for name, leaf in specs.items():
+        if name == "cache":
+            out[name] = cache_spec_tree(cfg, mesh, leaf)
+            continue
+        b = dp if _div(leaf.shape[0], r.dsize) else None
+        out[name] = P(b, *([None] * (len(leaf.shape) - 1)))
+    return out
+
+
+def opt_state_specs(param_specs_tree) -> Dict[str, Any]:
+    """Optimizer state mirrors the parameter sharding."""
+    return {
+        "step": P(),
+        "m": param_specs_tree,
+        "v": param_specs_tree,
+    }
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Shabari itself is a scheduling paper; the serving substrate it manages
+has four TPU compute hot spots, implemented here (DESIGN.md §5):
+flash_attention (prefill), decode_attention (flash-decode vs a ring KV
+cache), ssd_scan (Mamba2 SSD chunk scan), moe_gmm (expert grouped
+matmul). Each module provides ``pl.pallas_call`` + explicit BlockSpec
+VMEM tiling (MXU-aligned 128-multiples); ``ops.py`` holds the jit'd
+public wrappers with an ``interpret`` escape hatch (CPU validation) and
+``ref.py`` the pure-jnp oracles the tests assert against.
+"""

@@ -1,0 +1,125 @@
+"""Flash-decode — single-token GQA attention against a ring KV cache.
+
+The latency-critical op for decode_32k / long_500k: ONE query token per
+sequence attends to a W-deep cache. TPU adaptation (DESIGN.md §5):
+
+* the q-head group sharing one kv head (H/Hkv rows) forms the sublane
+  dim of the score tile — a (group x block_kv) MXU matmul per tile
+  instead of H separate vector products;
+* the kv length is the sequential grid axis; online-softmax statistics
+  live in fp32 VMEM scratch across its steps (flash-decode);
+* ring-buffer semantics (absolute slot positions + validity from
+  ``repro.models.kv_cache``) are applied as int32 tile masks, so the
+  kernel works for both the full-context and sliding-window caches.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, kvpos_ref, valid_ref, qpos_ref, o_ref,
+    m_scr, l_scr, acc_scr, *, num_kv_blocks: int, window: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (group, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    kvpos = kvpos_ref[0]  # (bkv,)
+    valid = valid_ref[0]  # (bkv,) int32
+    qpos = qpos_ref[0, 0]  # scalar int32
+
+    k_start = ki * k.shape[0]
+    live_row = (k_start + jax.lax.broadcasted_iota(jnp.int32, k.shape, 0)
+                < window)
+    k = jnp.where(live_row, k, 0.0)
+    v = jnp.where(live_row, v, 0.0)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (q.shape[-1] ** -0.5)  # (group, bkv)
+    live1 = live_row[:, 0]  # (bkv,) rows inside the real cache window
+    mask = (jnp.logical_and(valid > 0, kvpos <= qpos) & live1)[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, W, Hkv, D)
+    v: jax.Array,
+    kv_positions: jax.Array,  # (B, W) int32 — absolute ring positions
+    kv_valid: jax.Array,  # (B, W) bool
+    q_pos: jax.Array,  # (B,) int32
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    W, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_kv = min(block_kv, W)
+    nkv = math.ceil(W / block_kv)
+
+    qg = q.reshape(B, Hkv, group, D)
+    valid_i = kv_valid.astype(jnp.int32)
+    qpos2 = q_pos.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel, num_kv_blocks=nkv, window=W
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, h, ki: (b, ki)),
+            pl.BlockSpec((1, block_kv), lambda b, h, ki: (b, ki)),
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, kv_positions, valid_i, qpos2)
+    return out.reshape(B, 1, H, D)

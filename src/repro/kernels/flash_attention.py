@@ -1,0 +1,151 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+Online-softmax tiled attention in the style of the original
+FlashAttention, adapted to the TPU memory hierarchy: q/k/v tiles live in
+VMEM via BlockSpecs, the (block_q x block_kv) score tile feeds the MXU
+(both dims multiples of 128 at full size), and the softmax statistics
+(m, l) plus the output accumulator sit in fp32 VMEM scratch carried
+across the sequential kv grid dimension (TPU grids execute serially over
+the trailing axis, which is what makes cross-block accumulation legal).
+
+GQA is handled in the index_map: query head h reads kv head
+h // (H // Hkv) — no materialized broadcast. Causal and sliding-window
+masks are applied with iota comparisons inside the tile; fully-masked
+kv tiles are skipped via ``@pl.when`` on the block indices.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q: int, block_kv: int, num_kv_blocks: int,
+    causal: bool, window: Optional[int], seq_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Skip tiles that the causal/window structure fully masks.
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_kv - 1 > q_start - window
+        )
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bkv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        # rows past seq_len are padding (undefined memory) — zero them so
+        # 0-probability x garbage cannot poison the accumulator
+        kv_row = k_start + jax.lax.broadcasted_iota(jnp.int32, k.shape, 0)
+        live = kv_row < seq_len
+        k = jnp.where(live, k, 0.0)
+        v = jnp.where(live, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * (q.shape[-1] ** -0.5)  # (bq, bkv)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    nq = math.ceil(S / block_q)
+    nkv = math.ceil(S / block_kv)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        block_q=block_q, block_kv=block_kv, num_kv_blocks=nkv,
+        causal=causal, window=window, seq_len=S,
+    )
+    grid = (B, H, nq, nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec(
+                (1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h // group, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_kv, 1, D), lambda b, h, qi, ki: (b, ki, h // group, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum
+            pltpu.VMEM((block_q, D), jnp.float32),  # output acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,79 @@
+"""MoE grouped matmul — Pallas TPU kernel.
+
+Computes out[e] = buf[e] @ w[e] for every expert e over the dispatched
+token buffers (E, C, D) x (E, D, F): the compute core of Mixtral/Arctic
+layers after dispatch. Blocked (bc x bd) x (bd x bf) MXU tiles with an
+fp32 VMEM accumulator carried across the sequential contraction axis;
+the expert index is simply the leading grid dim, so expert-sharded
+weights keep their layout (experts never mix inside a tile).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(buf_ref, w_ref, o_ref, acc_scr, *, num_k_blocks: int,
+                contract_dim: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = buf_ref[0].astype(jnp.float32)  # (bc, bd)
+    b = w_ref[0].astype(jnp.float32)  # (bd, bf)
+    # zero padded contraction columns/rows (undefined memory past D)
+    d0 = ki * a.shape[1]
+    live_a = d0 + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1) < contract_dim
+    live_b = d0 + jax.lax.broadcasted_iota(jnp.int32, b.shape, 0) < contract_dim
+    a = jnp.where(live_a, a, 0.0)
+    b = jnp.where(live_b, b, 0.0)
+    acc_scr[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _emit():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gmm(
+    buf: jax.Array,  # (E, C, D)
+    w: jax.Array,  # (E, D, F)
+    *,
+    block_c: int = 128,
+    block_d: int = 512,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, D = buf.shape
+    F = w.shape[-1]
+    block_c = min(block_c, C)
+    block_d = min(block_d, D)
+    block_f = min(block_f, F)
+    nc = math.ceil(C / block_c)
+    nf = math.ceil(F / block_f)
+    nd = math.ceil(D / block_d)
+
+    kernel = functools.partial(_gmm_kernel, num_k_blocks=nd, contract_dim=D)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_c, block_f), lambda e, c, f, d: (e, c, f)
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(buf, w)

@@ -1,0 +1,86 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``INTERPRET`` flips every kernel to Pallas interpret mode — the kernel
+bodies execute in Python/XLA on CPU, which is how this container
+validates them (TPU v5e is the compile TARGET, not the runtime). On a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (the
+default when a TPU backend is detected).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ssd_scan as _ssd
+
+# interpret unless a real TPU is present
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_kv: int = 256,
+) -> jax.Array:
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=INTERPRET,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_positions: jax.Array,
+    kv_valid: jax.Array,
+    q_pos: jax.Array,
+    *,
+    block_kv: int = 512,
+) -> jax.Array:
+    return _dec.decode_attention(
+        q, k, v, kv_positions, kv_valid, q_pos,
+        block_kv=block_kv, interpret=INTERPRET,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+    chunk: int,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd_scan(x, dt, A, B_, C_, chunk, init_state, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_f"))
+def moe_gmm(
+    buf: jax.Array,
+    w: jax.Array,
+    *,
+    block_c: int = 128,
+    block_d: int = 512,
+    block_f: int = 512,
+) -> jax.Array:
+    return _gmm.moe_gmm(
+        buf, w, block_c=block_c, block_d=block_d, block_f=block_f,
+        interpret=INTERPRET,
+    )

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These delegate to (or mirror exactly) the reference model code in
+``repro.models`` so the kernels are validated against the same math the
+models run with ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import sdpa
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return sdpa(q, k, v, causal=causal, q_positions=positions,
+                kv_positions=positions, window=window)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, W, Hkv, D)
+    v: jax.Array,
+    kv_positions: jax.Array,  # (B, W) int32
+    kv_valid: jax.Array,  # (B, W) bool
+    q_pos: jax.Array,  # (B,) int32
+) -> jax.Array:
+    return sdpa(
+        q, k, v, causal=True,
+        q_positions=q_pos[:, None], kv_positions=kv_positions,
+        kv_valid=kv_valid,
+    )
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32, negative
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    return ssd_chunked(x, dt, A, B_, C_, chunk, init_state)
+
+
+def ssd_scan_sequential_ref(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array, C_: jax.Array,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step recurrence — the ground truth the chunked form and the
+    kernel must both match (used by property tests)."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    f32 = jnp.float32
+    state = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+             else init_state.astype(f32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t.astype(f32) * A.astype(f32))  # (B,H)
+        xw = x_t.astype(f32) * dt_t.astype(f32)[..., None]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xw, B_t.astype(f32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(f32))
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B_, 1, 0),
+        jnp.moveaxis(C_, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def moe_gmm_ref(
+    buf: jax.Array,  # (E, C, D) expert input buffers
+    w: jax.Array,  # (E, D, F)
+) -> jax.Array:
+    return jnp.einsum("ecd,edf->ecf", buf, w,
+                      preferred_element_type=jnp.float32).astype(buf.dtype)

@@ -1,0 +1,128 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+State-space duality (arXiv:2405.21060): within a chunk of Q tokens the
+output is an attention-like quadratic form (two (Q x Q) / (Q x P) MXU
+matmuls); across chunks a tiny (P x N) state recurrence carries the
+history. TPU mapping (DESIGN.md §5):
+
+* grid = (B, H, n_chunks); the chunk axis is the trailing (sequential)
+  grid dim, so the running state lives in fp32 VMEM scratch across its
+  steps — the recurrent dependency never leaves the core;
+* Q=256, P=64/128, N=64/128 keep every operand MXU-aligned and the
+  whole working set (~(QxQ) + 3x(QxN/P) + (PxN) fp32) well under VMEM;
+* the intra-chunk decay matrix exp(segsum) is built from a cumulative
+  sum over the chunk with an iota lower-triangle mask, all in registers.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref, y_ref, state_ref,
+    state_scr, *, num_chunks: int, chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    loga = dt * A  # (Q,)
+    cum = jnp.cumsum(loga)  # (Q,)
+    xw = x * dt[:, None]  # (Q, P)
+
+    # --- intra-chunk dual form -------------------------------------------
+    seg = cum[:, None] - cum[None, :]  # (Q, Q): sum over (j, i]
+    row = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    L = jnp.where(col <= row, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    y = jax.lax.dot_general(
+        L * scores, xw, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, P)
+
+    # --- inter-chunk contribution ----------------------------------------
+    state = state_scr[...]  # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, P)
+
+    # --- state update -------------------------------------------------------
+    total = cum[-1]
+    decay_to_end = jnp.exp(total - cum)  # (Q,)
+    new_state = state * jnp.exp(total) + jax.lax.dot_general(
+        xw, Bm * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_scr[...] = new_state
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0] = new_state
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32 post-softplus
+    A: jax.Array,  # (H,) fp32 negative
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), A.astype(jnp.float32), B_, C_, init_state)
+    return y, state

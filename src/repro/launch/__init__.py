@@ -1,0 +1,1 @@
+"""Launchers: production mesh, step functions, multi-pod dry-run, train/serve."""

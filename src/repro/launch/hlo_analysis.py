@@ -1,0 +1,200 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis()`` supplies FLOPs and HBM bytes of the partitioned
+(per-device) module; collective bytes are NOT included there, so we parse
+the optimized HLO text and sum traffic over every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Per-device traffic factors (ring algorithms, group size n):
+    all-gather        result R: R * (n-1)/n
+    all-reduce        tensor T: 2 * T * (n-1)/n
+    reduce-scatter    result R (=T/n): R * (n-1)
+    all-to-all        result R: R * (n-1)/n
+    collective-permute result R: R
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,n]<=[...] — n participants per group
+        return int(m.group(2))
+    return default
+
+
+def _traffic(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return result_bytes * (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if op == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_traffic_bytes: float
+    op_counts: Dict[str, int]
+    op_bytes: Dict[str, float]
+
+
+def collective_stats(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Sum per-device collective traffic over an optimized HLO module.
+
+    ``-start`` ops are counted; their ``-done`` halves are skipped to
+    avoid double counting.
+    """
+    total = 0.0
+    counts: Dict[str, int] = {}
+    op_bytes: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done.clone(" in line:
+            continue
+        m = _OP_RE.search(line)
+        result_bytes = 0
+        op = None
+        if m:
+            op = m.group(3)
+            result_bytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_OP_RE.search(line)
+            if mt:
+                op = mt.group(2)
+                for sm in _SHAPE_RE.finditer(mt.group(1)):
+                    result_bytes += _shape_bytes(sm.group(1), sm.group(2))
+        if not op:
+            continue
+        n = _group_size(line, default_group)
+        t = _traffic(op, result_bytes, n)
+        total += t
+        counts[op] = counts.get(op, 0) + 1
+        op_bytes[op] = op_bytes.get(op, 0.0) + t
+    return CollectiveStats(total, counts, op_bytes)
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_bytes_global: float
+    model_flops: float
+    useful_flops_ratio: float
+    dominant: str
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    *,
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_collective_bytes: float,
+    chips: int,
+    model_flops: float,
+    peak_flops: float,
+    hbm_bw: float,
+    link_bw: float,
+) -> Roofline:
+    compute_s = per_device_flops / peak_flops
+    memory_s = per_device_bytes / hbm_bw
+    collective_s = per_device_collective_bytes / link_bw
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    g_flops = per_device_flops * chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops_global=g_flops,
+        hlo_bytes_global=per_device_bytes * chips,
+        collective_bytes_global=per_device_collective_bytes * chips,
+        model_flops=model_flops,
+        useful_flops_ratio=model_flops / g_flops if g_flops else 0.0,
+        dominant=dominant,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params,
+    D = tokens processed by the step)."""
+    from repro.configs.base import decoder_seq_len
+
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * decoder_seq_len(cfg, shape)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * decoder_seq_len(cfg, shape)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

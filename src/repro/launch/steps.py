@@ -1,0 +1,165 @@
+"""Step functions lowered by the dry-run and used by the real drivers.
+
+* ``train_step``   — loss, grads, AdamW update (donated params/opt state).
+* ``prefill_step`` — full-sequence forward building the decode cache.
+* ``serve_step``   — ONE new token against a seq_len-deep cache (what the
+  decode_32k / long_500k shapes lower).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    effective_decode_window,
+)
+from repro.models.model import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+)
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+# bf16 moments for the >=100B-param archs (DESIGN.md §6).
+BF16_MOMENT_ARCHS = {"internvl2-76b", "arctic-480b"}
+
+
+def make_constrain(cfg: ModelConfig, mesh):
+    """Activation-sharding hook: keeps the residual stream batch-sharded
+    and the logits (batch, model-on-vocab)-sharded so GSPMD gathers FSDP
+    weights instead of moving giant fp32 activations (EXPERIMENTS.md
+    §Perf, hillclimb #1)."""
+    if mesh is None:
+        return None
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = mesh.axis_names
+    dp = tuple(a for a in axes if a != "model")
+    dp = dp if len(dp) > 1 else dp[0]
+    msize = mesh.shape["model"]
+    dsize = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dsize *= mesh.shape[a]
+
+    def constrain(name, x):
+        if name == "hidden":
+            spec = P(dp, *([None] * (x.ndim - 1)))
+        elif name == "logits":
+            v = x.shape[-1]
+            spec = P(dp, *([None] * (x.ndim - 2)),
+                     "model" if v % msize == 0 else None)
+        elif name in ("moe_buf", "moe_h"):
+            # (E, C, D|F): experts over model when divisible; capacity
+            # carries the data axes so buffers never replicate
+            e = "model" if x.shape[0] % msize == 0 else None
+            c = dp if x.shape[1] % dsize == 0 else None
+            spec = P(e, c, None)
+        elif name == "moe_tokens":
+            spec = P(dp if x.shape[0] % dsize == 0 else None, None)
+        elif name == "scores":
+            # decode attention scores (B, Hkv, g, W): keep W model-sharded
+            # when heads can't carry the model axis, so the softmax
+            # reduces shard-wise instead of gathering the cache
+            if x.shape[1] % msize == 0:
+                spec = P(dp, "model", *([None] * (x.ndim - 2)))
+            elif x.shape[-1] % msize == 0:
+                spec = P(dp, *([None] * (x.ndim - 2)), "model")
+            else:
+                return x
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def adamw_config_for(cfg: ModelConfig) -> AdamWConfig:
+    mdt = "bfloat16" if cfg.name in BF16_MOMENT_ARCHS else "float32"
+    return AdamWConfig(moment_dtype=mdt)
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+    use_pallas: bool = False, mesh=None,
+) -> Callable:
+    opt_cfg = opt_cfg or adamw_config_for(cfg)
+    constrain = make_constrain(cfg, mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = forward_train(
+                p,
+                cfg,
+                batch["tokens"],
+                batch["labels"],
+                patch_embeds=batch.get("patch_embeds"),
+                frame_embeds=batch.get("frame_embeds"),
+                use_pallas=use_pallas,
+                remat=True,
+                constrain=constrain,
+            )
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig, shape: ShapeConfig, use_pallas: bool = False, mesh=None
+) -> Callable:
+    W = effective_decode_window(cfg, shape)
+    long_ctx = shape.name == "long_500k"
+    constrain = make_constrain(cfg, mesh)
+
+    def prefill_step(params, batch):
+        logits, cache = forward_prefill(
+            params,
+            cfg,
+            batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            frame_embeds=batch.get("frame_embeds"),
+            cache_window=W or None,
+            long_context=long_ctx,
+            use_pallas=use_pallas,
+            constrain=constrain,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, use_pallas: bool = False, mesh=None) -> Callable:
+    constrain = make_constrain(cfg, mesh)
+
+    def serve_step(params, cache, token):
+        logits, new_cache = forward_decode(
+            params, cfg, token, cache, use_pallas=use_pallas,
+            constrain=constrain,
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def eval_param_shapes(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def eval_opt_shapes(cfg: ModelConfig, param_shapes, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw_config_for(cfg)
+    return jax.eval_shape(lambda: init_opt_state(opt_cfg, param_shapes))

@@ -1,0 +1,70 @@
+"""Training launcher: train a reduced arch on CPU with the full
+substrate (data pipeline, AdamW, checkpointing).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      [--steps 100] [--batch 4] [--seq 128] [--ckpt-dir DIR] [--resume CKPT]
+
+The production train_step for the FULL configs is exercised by the
+multi-pod dry-run (repro.launch.dryrun); this driver runs real steps at
+reduced scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import canonical_id, get_reduced_config
+from repro.training.data import DataConfig
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(canonical_id(args.arch))
+    seq = args.seq
+    if cfg.family in ("ssm", "hybrid"):
+        seq = max(cfg.ssm_chunk, seq // cfg.ssm_chunk * cfg.ssm_chunk)
+    if cfg.is_encoder_decoder:
+        seq = min(seq, cfg.max_target_positions)
+    print(f"training {cfg.name} (reduced, {cfg.family}) seq={seq}")
+
+    def extra(step):
+        import jax.numpy as jnp
+
+        out = {}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jnp.zeros(
+                (args.batch, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+        if cfg.is_encoder_decoder:
+            out["frame_embeds"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        return out
+
+    h = train(
+        cfg,
+        data_cfg=DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                            batch_size=args.batch, seed=args.seed),
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                            total_steps=args.steps),
+        loop=TrainLoopConfig(steps=args.steps, log_every=10,
+                             ckpt_every=max(args.steps // 2, 50),
+                             ckpt_dir=args.ckpt_dir, seed=args.seed),
+        resume_from=args.resume,
+        extra_batch_fn=extra if cfg.family in ("vlm",) or cfg.is_encoder_decoder else None,
+    )
+    print(f"loss {h['loss'][0]:.3f} -> {h['loss'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM families."""
+
+from repro.models.model import (
+    count_params,
+    count_params_analytic,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+)
+
+__all__ = [
+    "init_params",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "count_params",
+    "count_params_analytic",
+]

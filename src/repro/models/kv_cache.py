@@ -1,0 +1,139 @@
+"""Decode-time caches: ring-buffer KV caches and SSM states.
+
+Layers are SCANNED (params stacked on a leading layer axis — see
+``repro.models.model``), so caches are stacked too:
+
+* ``k``, ``v``     : (L_attn, B, W, Hkv, hd)   — self-attention KV
+* ``conv``         : (L_ssm, B, K-1, C)        — mamba conv window
+* ``ssd``          : (L_ssm, B, H, P, N) f32   — mamba SSD state
+* ``xk``, ``xv``   : (L_dec, B, S_enc, Hkv, hd) — whisper cross-attn KV
+* ``pos``          : (B,) int32                — tokens generated so far
+
+W is the *effective* window (full context for decode_32k full-attention
+archs; the SWA / long-context window otherwise). Keys are RoPE'd at their
+absolute position before caching, so ring-buffer slots stay consistent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    effective_decode_window,
+)
+
+CacheShapes = Dict[str, Tuple[Tuple[int, ...], Any]]
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    """Channels entering the causal conv: x plus B and C (n_groups = 1)."""
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def num_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return cfg.num_layers
+    if cfg.family == "hybrid":
+        # one shared block applied every attn_every mamba layers
+        return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+    return 0
+
+
+def num_ssm_layers(cfg: ModelConfig) -> int:
+    return cfg.num_layers if cfg.family in ("ssm", "hybrid") else 0
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig) -> CacheShapes:
+    B = shape.global_batch
+    W = effective_decode_window(cfg, shape)
+    dt = jnp.dtype(cfg.dtype)
+    out: CacheShapes = {"pos": ((B,), jnp.int32)}
+    La, Ls = num_attn_layers(cfg), num_ssm_layers(cfg)
+    if La:
+        out["k"] = ((La, B, W, cfg.num_kv_heads, cfg.head_dim), dt)
+        out["v"] = ((La, B, W, cfg.num_kv_heads, cfg.head_dim), dt)
+    if Ls:
+        out["conv"] = ((Ls, B, cfg.conv_width - 1, conv_dim(cfg)), dt)
+        out["ssd"] = ((Ls, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["xk"] = ((cfg.num_layers, B, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt)
+        out["xv"] = ((cfg.num_layers, B, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt)
+    return out
+
+
+def init_cache(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.Array]:
+    return {
+        name: jnp.zeros(shp, dtype)
+        for name, (shp, dtype) in cache_shapes(cfg, shape).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer helpers (single layer views — scan bodies see one layer)
+# ---------------------------------------------------------------------------
+
+
+# Ring-write formulation. "onehot" (baseline) = masked multiply-add:
+# reads+writes the whole buffer and, on a W-sharded cache, makes GSPMD
+# re-materialize it in fp32 every step (the dominant decode collective,
+# §Perf). "scatter" = one-row dynamic scatter per batch element, which
+# stays shard-local.
+_RING_MODE = "onehot"
+
+
+def set_ring_mode(name: str) -> None:
+    global _RING_MODE
+    assert name in ("onehot", "scatter")
+    _RING_MODE = name
+
+
+def ring_write(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one entry per batch row at slot pos % W.
+
+    buf: (B, W, ...); new: (B, ...) (no window axis); pos: (B,) int32.
+    """
+    W = buf.shape[1]
+    slot = (pos % W).astype(jnp.int32)
+    if _RING_MODE == "scatter":
+        return jax.vmap(lambda b, n, s: b.at[s].set(n))(buf, new, slot)
+    onehot = jax.nn.one_hot(slot, W, dtype=buf.dtype)  # (B, W)
+    onehot = onehot.reshape(onehot.shape + (1,) * (buf.ndim - 2))
+    return buf * (1 - onehot) + new[:, None] * onehot
+
+
+def ring_positions(pos: jax.Array, W: int) -> jax.Array:
+    """Absolute position held by each ring slot *after* ``pos`` writes.
+
+    pos: (B,) -> (B, W) int32; slots never written hold negative values.
+    Slot s holds the largest p < pos with p % W == s.
+    """
+    slots = jnp.arange(W, dtype=jnp.int32)[None, :]
+    p = pos[:, None]
+    base = (p - 1 - slots) // W * W + slots
+    over = base > p - 1
+    return jnp.where(over, base - W, base)
+
+
+def ring_valid(pos: jax.Array, W: int) -> jax.Array:
+    """Which ring slots contain live history. pos: (B,) -> (B, W) bool."""
+    return ring_positions(pos, W) >= 0
+
+
+def write_prefill(buf: jax.Array, new: jax.Array) -> jax.Array:
+    """Fill one layer's cache with the last W entries of a prefill segment.
+
+    buf: (B, W, ...); new: (B, S, ...). Resulting slot layout matches what
+    ring_write would produce after S sequential writes.
+    """
+    B, W = buf.shape[:2]
+    S = new.shape[1]
+    if S <= W:
+        return buf.at[:, :S].set(new)
+    tail = new[:, S - W :]
+    abs_pos = jnp.arange(S - W, S, dtype=jnp.int32)
+    return buf.at[:, abs_pos % W].set(tail)

@@ -1,0 +1,397 @@
+"""Shared building blocks: norms, RoPE, GQA attention, MLPs.
+
+Everything is a pure function over explicit parameter pytrees (dicts of
+jnp arrays). Reference attention paths are plain einsums that XLA fuses;
+the Pallas kernels in ``repro.kernels`` mirror these and are validated
+against them (``use_pallas`` plumbs through ``repro.kernels.ops``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, weight: jax.Array, eps: float = 1e-5):
+    """Mamba2's RMSNorm(x * silu(z)) fused gate-norm."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — reference einsum paths
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def attn_qkv(p: Params, cfg: ModelConfig, x: jax.Array):
+    """Project x:(B,S,D) -> q:(B,S,H,hd), k/v:(B,S,Hkv,hd)."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attn_out(p: Params, cfg: ModelConfig, o: jax.Array) -> jax.Array:
+    B, S = o.shape[:2]
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """Broadcast kv heads to q heads: (B,S,Hkv,D) -> (B,S,H,D)."""
+    B, S, Hkv, D = k.shape
+    rep = num_heads // Hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# GQA contraction mode. "repeat" (baseline) materializes kv broadcast to
+# H heads; "grouped" keeps the kv-head dim intact and folds the q-head
+# group into the einsum — no repeat, so a sharded KV cache keeps its
+# sharding through attention (GSPMD otherwise all-gathers the whole
+# cache; §Perf hillclimb decode iteration 2).
+_GQA_MODE = "repeat"
+
+
+def set_gqa_mode(name: str) -> None:
+    global _GQA_MODE
+    assert name in ("repeat", "grouped")
+    _GQA_MODE = name
+
+
+def _sdpa_grouped(q, k, v, *, causal, q_positions, kv_positions, window,
+                  kv_valid):
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    scale = D ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = jnp.ones((B, 1, 1, Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)
+
+
+def sdpa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA broadcast.
+
+    q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D). Masking uses absolute positions so
+    the same code covers prefill (q_pos == kv_pos grid) and ring-buffer
+    decode (arbitrary kv_positions, kv_valid marks live slots).
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv, dtype=jnp.int32)[None, :]
+    if _GQA_MODE == "grouped" and H != k.shape[2]:
+        return _sdpa_grouped(
+            q, k, v, causal=causal, q_positions=q_positions,
+            kv_positions=kv_positions, window=window, kv_valid=kv_valid,
+        )
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = D ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    qp = q_positions[:, None, :, None]  # (B,1,Sq,1)
+    kp = kv_positions[:, None, None, :]  # (B,1,1,Skv)
+    mask = jnp.ones((B, 1, Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Rows that are fully masked produce NaN from softmax(-inf); zero them.
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return o
+
+
+def sdpa_decode_split(
+    q: jax.Array,      # (B, 1, H, D) — current token's query
+    k_self: jax.Array,  # (B, 1, Hkv, D)
+    v_self: jax.Array,
+    k_buf: jax.Array,  # (B, W, Hkv, D) — ring cache (may be W-sharded)
+    v_buf: jax.Array,
+    *,
+    kv_positions: jax.Array,  # (B, W)
+    kv_valid: jax.Array,      # (B, W)
+    q_pos: jax.Array,         # (B,)
+    constrain=None,
+) -> jax.Array:
+    """Flash-decode-style split attention for one token.
+
+    Attends to the cache and to the current token SEPARATELY and merges
+    the two partial softmaxes with a log-sum-exp combine. The cache is
+    never concatenated with the new entry, so a W-sharded cache keeps its
+    sharding (GSPMD otherwise re-materializes all of it every decode
+    step — EXPERIMENTS.md §Perf). Exactly equal to full softmax.
+    """
+    B, _, H, D = q.shape
+    if constrain is None:
+        constrain = lambda name, v: v
+    Hkv = k_buf.shape[2]
+    g = H // Hkv
+    scale = D ** -0.5
+    # ---- cache part: (B,Hkv,g,W) scores, grouped GQA (no kv repeat) ------
+    qg = q[:, 0].reshape(B, Hkv, g, D)
+    s_c = jnp.einsum("bhgd,bkhd->bhgk", qg, k_buf,
+                     preferred_element_type=jnp.float32) * scale
+    # keep the score tensor W-sharded: the softmax then reduces over the
+    # sharded axis with (B,H)-sized collectives instead of GSPMD gathering
+    # the whole KV cache (§Perf decode hillclimb)
+    s_c = constrain("scores", s_c)
+    mask = (kv_valid & (kv_positions <= q_pos[:, None]))[:, None, None, :]
+    s_c = jnp.where(mask, s_c, -jnp.inf)
+    m_c = jnp.max(s_c, axis=-1)  # (B,Hkv,g)
+    m_c_safe = jnp.where(jnp.isfinite(m_c), m_c, 0.0)
+    p = jnp.exp(s_c - m_c_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l_c = jnp.sum(p, axis=-1)  # (B,Hkv,g)
+    o_c = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_buf.dtype), v_buf)
+    # flatten grouped heads back to (B,H)
+    m_c_safe = m_c_safe.reshape(B, H)
+    l_c = l_c.reshape(B, H)
+    o_c = o_c.reshape(B, H, D)
+    # ---- self part: scalar score per head --------------------------------
+    ks = _expand_kv(k_self, H)
+    vs = _expand_kv(v_self, H)
+    s_s = jnp.einsum("bqhd,bqhd->bhq", q, ks,
+                     preferred_element_type=jnp.float32)[:, :, 0] * scale  # (B,H)
+    # ---- merge ------------------------------------------------------------
+    # o_c holds sum_k exp(s_k - m_c) v_k; true weights use exp(s_k - m):
+    # scale by alpha_c = exp(m_c - m). Self term analogous with weight 1.
+    m = jnp.maximum(m_c_safe, s_s)
+    alpha_c = jnp.where(l_c > 0, jnp.exp(m_c_safe - m), 0.0)
+    alpha_s = jnp.exp(s_s - m)
+    denom = l_c * alpha_c + alpha_s
+    o = (o_c.astype(jnp.float32) * (alpha_c / denom)[..., None]
+         + vs[:, 0].astype(jnp.float32) * (alpha_s / denom)[..., None])
+    return o.astype(q.dtype)[:, None]
+
+
+# Q-tiled attention (§Perf): the reference sdpa materializes the full
+# (B,H,S,S) score tensor — at prefill_32k that is the dominant temp-memory
+# term (hundreds of GB/device for archs whose heads don't divide the
+# model axis). Tiling the query axis bounds live scores at (B,H,qt,S) per
+# step with bit-identical results. 0 = off (baseline).
+_ATTN_QTILE = 0
+
+
+def set_attn_qtile(n: int) -> None:
+    global _ATTN_QTILE
+    _ATTN_QTILE = max(0, int(n))
+
+
+def sdpa_qtiled(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_tile: int,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    qt = q_tile
+    while S % qt:
+        qt //= 2  # largest power-of-two tile dividing S
+    nt = S // qt
+    if nt <= 1:
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        return sdpa(q, k, v, causal=causal, q_positions=positions,
+                    kv_positions=positions, window=window)
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q_tiles = jnp.moveaxis(q.reshape(B, nt, qt, H, D), 1, 0)
+
+    from repro.models import model as _model
+
+    def tile(i, q_t):
+        q_pos = (i * qt + jnp.arange(qt, dtype=jnp.int32))[None]
+        q_pos = jnp.broadcast_to(q_pos, (B, qt))
+        return sdpa(q_t, k, v, causal=causal, q_positions=q_pos,
+                    kv_positions=kv_pos, window=window)
+
+    if _model._SCAN_UNROLL > 1:
+        outs = [tile(i, q_tiles[i]) for i in range(nt)]
+        o = jnp.stack(outs, 0)
+    else:
+        def body(_, inp):
+            i, q_t = inp
+            return None, tile(i, q_t)
+
+        _, o = jax.lax.scan(
+            body, None, (jnp.arange(nt, dtype=jnp.int32), q_tiles)
+        )
+    return jnp.moveaxis(o, 0, 1).reshape(B, S, H, D)
+
+
+def attention_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full self-attention over x (train / prefill / encoder)."""
+    q, k, v = attn_qkv(p, cfg, x)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = sdpa(q, k, v, causal=causal, q_positions=positions,
+             kv_positions=positions, window=window)
+    return attn_out(p, cfg, o)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "wu": dense_init(ks[1], cfg.d_model, d_ff, dt),
+            "wd": dense_init(ks[2], d_ff, cfg.d_model, dt),
+        }
+    if cfg.mlp_type == "squared_relu":
+        return {
+            "wu": dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "wd": dense_init(ks[1], d_ff, cfg.d_model, dt),
+        }
+    raise ValueError(cfg.mlp_type)
+
+
+def mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if cfg.mlp_type == "squared_relu":
+        h = jax.nn.relu(x @ p["wu"])
+        return (h * h) @ p["wd"]
+    raise ValueError(cfg.mlp_type)
+
+
+def mlp_param_count(cfg: ModelConfig, d_ff: Optional[int] = None) -> int:
+    d_ff = d_ff or cfg.d_ff
+    n = 2 if cfg.mlp_type == "squared_relu" else 3
+    return n * cfg.d_model * d_ff
+
+
+def attn_param_count(cfg: ModelConfig) -> int:
+    n = 2 * cfg.d_model * cfg.q_dim + 2 * cfg.d_model * cfg.kv_dim
+    if cfg.qkv_bias:
+        n += cfg.q_dim + 2 * cfg.kv_dim
+    return n

@@ -1,0 +1,700 @@
+"""Model assembly: init / train / prefill / decode for all six families.
+
+Layers are homogeneous within a family, so per-layer parameters are
+STACKED on a leading axis and applied with ``jax.lax.scan`` — this keeps
+the HLO small (one layer body) and compile times tractable for the 80
+multi-pod dry-run compiles. Family quirks:
+
+* hybrid (zamba2): a single SHARED attention block (one parameter set,
+  closed over by the scan body) fires every ``attn_every`` mamba layers,
+  selected with ``lax.cond`` on the layer index; each firing has its own
+  KV-cache slice.
+* audio (whisper): a bidirectional encoder scan feeds per-decoder-layer
+  cross-attention KV, cached at prefill; learned absolute positions, no
+  RoPE.
+* vlm (internvl2): stubbed patch embeddings are prepended to the text
+  embeddings; loss masks the frontend positions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.kv_cache import (
+    conv_dim,
+    num_attn_layers,
+    ring_positions,
+    ring_valid,
+    ring_write,
+    write_prefill,
+)
+
+Params = Dict[str, Any]
+
+# Scan unroll factor for the layer stack. 1 (default) keeps the HLO small
+# for fast test iteration; the dry-run sets it to the layer count because
+# XLA's cost analysis counts a while-loop body ONCE — full unroll is the
+# only way compiled FLOPs/bytes reflect the whole model (calibrated in
+# EXPERIMENTS.md §Dry-run).
+_SCAN_UNROLL = 1
+
+
+def set_scan_unroll(n: int) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = max(1, int(n))
+
+
+def _scan(body, init, xs, length=None):
+    return jax.lax.scan(body, init, xs, unroll=_SCAN_UNROLL)
+
+
+# Remat policy for the layer-scan body during training. "nothing" =
+# recompute everything (min memory); "dots" = save matmul outputs (less
+# recompute, more memory). §Perf hillclimbs flip this per arch.
+_REMAT_POLICY = "nothing"
+
+
+def set_remat_policy(name: str) -> None:
+    global _REMAT_POLICY
+    assert name in ("nothing", "dots")
+    _REMAT_POLICY = name
+
+
+def _checkpoint(body):
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if _REMAT_POLICY == "nothing"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(body, policy=policy)
+
+
+# Decode attention mode. "concat" (baseline) appends the current token's
+# K/V to the cache window before attending — on a W-sharded cache the
+# (W+1)-long concat forces GSPMD to re-materialize the whole cache every
+# step. "split" attends to the cache and the current token separately and
+# merges the two partial softmaxes (flash-decode style), touching only
+# (B,H,1)-scale tensors outside the sharded cache. §Perf hillclimb knob.
+_DECODE_MODE = "concat"
+
+
+def set_decode_mode(name: str) -> None:
+    global _DECODE_MODE
+    assert name in ("concat", "split")
+    _DECODE_MODE = name
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_mlp_block(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[0], cfg),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.family == "moe" and not cross:
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+        if cfg.dense_residual:
+            p["dense_mlp"] = L.init_mlp(ks[2], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), dt)
+        p["xattn"] = L.init_attention(ks[3], cfg)
+    return p
+
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _init_attn_mlp_block(key, cfg)
+    if cfg.family == "ssm":
+        return {"norm": jnp.ones((cfg.d_model,), dt), "mamba": SSM.init_mamba_block(key, cfg)}
+    if cfg.family == "hybrid":
+        return {"norm": jnp.ones((cfg.d_model,), dt), "mamba": SSM.init_mamba_block(key, cfg)}
+    if cfg.family == "audio":
+        return _init_attn_mlp_block(key, cfg, cross=True)
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    block_keys = jax.random.split(keys[0], cfg.num_layers)
+    params: Params = {
+        "embed": L.embed_init(keys[1], cfg.vocab_size, cfg.d_model, dt),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(block_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(keys[2], cfg.d_model, cfg.vocab_size, dt),
+    }
+    if cfg.family == "hybrid":
+        # One shared attention block; mlp_type fixed to swiglu for it.
+        params["shared_attn"] = {
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "attn": L.init_attention(keys[3], cfg),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_mlp(keys[4], cfg),
+        }
+    if cfg.family == "audio":
+        enc_keys = jax.random.split(keys[5], cfg.encoder_layers)
+        enc_cfg = cfg  # same dims for encoder blocks
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: {
+                    "norm1": jnp.ones((cfg.d_model,), dt),
+                    "attn": L.init_attention(jax.random.fold_in(k, 0), enc_cfg),
+                    "norm2": jnp.ones((cfg.d_model,), dt),
+                    "mlp": L.init_mlp(jax.random.fold_in(k, 1), enc_cfg),
+                }
+            )(enc_keys),
+            "norm": jnp.ones((cfg.d_model,), dt),
+        }
+        params["enc_pos"] = (
+            jax.random.normal(keys[6], (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+        params["dec_pos"] = (
+            jax.random.normal(keys[7], (cfg.max_target_positions, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_full(
+    bp: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    window: Optional[int],
+    enc_out: Optional[jax.Array],
+    use_pallas: bool,
+    constrain=None,
+):
+    """One attention(+mlp/moe/cross) block over a full sequence.
+
+    Returns (x, aux, (k_rope, v)) — the RoPE'd K and V for cache writing.
+    """
+    use_rope = cfg.family != "audio"
+    h = L.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(bp["attn"], cfg, h)
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.flash_attention(q, k, v, causal=True, window=window)
+    elif L._ATTN_QTILE:
+        o = L.sdpa_qtiled(q, k, v, causal=True, window=window,
+                          q_tile=L._ATTN_QTILE)
+    else:
+        o = L.sdpa(q, k, v, causal=True, q_positions=positions,
+                   kv_positions=positions, window=window)
+    x = x + L.attn_out(bp["attn"], cfg, o)
+
+    xk = xv = None
+    if cfg.is_encoder_decoder and enc_out is not None:
+        hx = L.rms_norm(x, bp["norm_x"], cfg.norm_eps)
+        qx, _, _ = L.attn_qkv(bp["xattn"], cfg, hx)
+        _, xk, xv = L.attn_qkv(bp["xattn"], cfg, enc_out)
+        ox = L.sdpa(qx, xk, xv, causal=False)
+        x = x + L.attn_out(bp["xattn"], cfg, ox)
+
+    h2 = L.rms_norm(x, bp["norm2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = MOE.moe_block(bp["moe"], cfg, h2, constrain=constrain)
+        if cfg.dense_residual:
+            y = y + L.mlp(bp["dense_mlp"], cfg, h2)
+    else:
+        y = L.mlp(bp["mlp"], cfg, h2)
+    x = x + y
+    return x, aux, (k, v, xk, xv)
+
+
+def _decoder_window(cfg: ModelConfig, long_context: bool) -> Optional[int]:
+    if cfg.sliding_window is not None:
+        return cfg.sliding_window
+    if long_context:
+        return cfg.long_context_window
+    return None
+
+
+def _run_encoder(params: Params, cfg: ModelConfig, frame_embeds: jax.Array) -> jax.Array:
+    x = frame_embeds + params["enc_pos"][None]
+    Senc = x.shape[1]
+    positions = jnp.arange(Senc, dtype=jnp.int32)[None]
+
+    def body(h, bp):
+        a = L.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(bp["attn"], cfg, a)
+        o = L.sdpa(q, k, v, causal=False)
+        h = h + L.attn_out(bp["attn"], cfg, o)
+        m = L.rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], cfg, m)
+        return h, None
+
+    x, _ = _scan(body, x, params["encoder"]["blocks"])
+    return L.rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def _embed_inputs(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    patch_embeds: Optional[jax.Array],
+) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward_seq(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    frame_embeds: Optional[jax.Array] = None,
+    long_context: bool = False,
+    want_cache: bool = False,
+    cache_window: Optional[int] = None,
+    use_pallas: bool = False,
+    remat: bool = False,
+    constrain=None,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence forward. Returns (logits, aux_loss, cache|None).
+
+    With ``want_cache`` the per-layer K/V (last ``cache_window`` entries)
+    / SSM states are collected for subsequent decode.
+
+    ``constrain(name, x)`` — optional activation-sharding hook applied at
+    "hidden" (post-embed residual stream) and "logits". The launcher
+    installs ``with_sharding_constraint``s here; without them GSPMD may
+    e.g. all-reduce fp32 logits over the data axis instead of gathering
+    the FSDP-sharded lm_head (a 40 GB vs 40 MB difference, see
+    EXPERIMENTS.md §Perf).
+    """
+    if constrain is None:
+        constrain = lambda name, v: v
+    x = _embed_inputs(params, cfg, tokens, patch_embeds)
+    x = constrain("hidden", x)
+    Bsz, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    window = _decoder_window(cfg, long_context)
+    W = cache_window or S
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert frame_embeds is not None
+        enc_out = _run_encoder(params, cfg, frame_embeds)
+        x = x + params["dec_pos"][None, :S]
+
+    cache: Dict[str, jax.Array] = {}
+    shared = params.get("shared_attn")
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def body(h, bp):
+            h, aux, (k, v, xk, xv) = _attn_full(
+                bp, cfg, h, positions, window, enc_out, use_pallas,
+                constrain=constrain,
+            )
+            ys = {"aux": aux}
+            if want_cache:
+                zero = jnp.zeros((Bsz, W) + k.shape[2:], k.dtype)
+                ys["k"] = write_prefill(zero, k)
+                ys["v"] = write_prefill(zero, v)
+                if xk is not None:
+                    ys["xk"] = xk
+                    ys["xv"] = xv
+            return h, ys
+
+        if remat:
+            body = _checkpoint(body)
+        x, ys = _scan(body, x, params["blocks"])
+        aux = jnp.sum(ys["aux"])
+        if want_cache:
+            cache["k"], cache["v"] = ys["k"], ys["v"]
+            if "xk" in ys:
+                cache["xk"], cache["xv"] = ys["xk"], ys["xv"]
+
+    elif cfg.family in ("ssm", "hybrid"):
+        n_apps = num_attn_layers(cfg)
+
+        def body(h, inp):
+            bp, idx = inp
+            ys = {}
+            if cfg.family == "hybrid":
+
+                def with_attn(h):
+                    hh, _, (k, v, _, _) = _attn_full(
+                        shared, cfg, h, positions, window, None, use_pallas,
+                        constrain=constrain,
+                    )
+                    return hh, k, v
+
+                def without_attn(h):
+                    zk = jnp.zeros(
+                        (Bsz, S, cfg.num_kv_heads, cfg.head_dim), h.dtype
+                    )
+                    return h, zk, zk
+
+                h, k, v = jax.lax.cond(
+                    idx % cfg.attn_every == 0, with_attn, without_attn, h
+                )
+                if want_cache:
+                    zero = jnp.zeros((Bsz, W) + k.shape[2:], k.dtype)
+                    ys["k"] = write_prefill(zero, k)
+                    ys["v"] = write_prefill(zero, v)
+            u = L.rms_norm(h, bp["norm"], cfg.norm_eps)
+            out, ssd_state, conv_state = SSM.mamba_block(
+                bp["mamba"], cfg, u, use_pallas=use_pallas
+            )
+            h = h + out
+            ys["aux"] = jnp.zeros((), jnp.float32)
+            if want_cache:
+                ys["ssd"] = ssd_state
+                ys["conv"] = conv_state
+            return h, ys
+
+        if remat:
+            body = _checkpoint(body)
+        x, ys = _scan(
+            body, x, (params["blocks"], jnp.arange(cfg.num_layers, dtype=jnp.int32))
+        )
+        aux = jnp.sum(ys["aux"])
+        if want_cache:
+            cache["ssd"], cache["conv"] = ys["ssd"], ys["conv"]
+            if cfg.family == "hybrid":
+                # Compact the per-layer attn caches down to the fired slots.
+                fired = jnp.nonzero(
+                    jnp.arange(cfg.num_layers) % cfg.attn_every == 0,
+                    size=n_apps,
+                )[0]
+                cache["k"] = ys["k"][fired]
+                cache["v"] = ys["v"][fired]
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain("logits", x @ params["lm_head"])
+    if want_cache:
+        cache["pos"] = jnp.full((Bsz,), S, jnp.int32)
+        return logits, aux, cache
+    return logits, aux, None
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Vocab-shard-friendly CE: the gold logit is extracted with an iota
+    comparison instead of take_along_axis, which GSPMD would otherwise
+    implement by all-gathering the full fp32 logits (40 GB/device for the
+    nemotron-scale vocabs — see EXPERIMENTS.md §Perf)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return logz - gold
+
+
+def forward_train(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    frame_embeds: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    remat: bool = True,
+    constrain=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (scalar loss, metrics)."""
+    logits, aux, _ = forward_seq(
+        params,
+        cfg,
+        tokens,
+        patch_embeds=patch_embeds,
+        frame_embeds=frame_embeds,
+        use_pallas=use_pallas,
+        remat=remat,
+        constrain=constrain,
+    )
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.frontend_tokens :]
+    ce = cross_entropy(logits, labels)
+    loss = jnp.mean(ce)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    frame_embeds: Optional[jax.Array] = None,
+    cache_window: Optional[int] = None,
+    long_context: bool = False,
+    use_pallas: bool = False,
+    constrain=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (last-position logits: (B, V), cache)."""
+    logits, _, cache = forward_seq(
+        params,
+        cfg,
+        tokens,
+        patch_embeds=patch_embeds,
+        frame_embeds=frame_embeds,
+        want_cache=True,
+        cache_window=cache_window,
+        long_context=long_context,
+        use_pallas=use_pallas,
+        constrain=constrain,
+    )
+    assert cache is not None
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def _attn_decode(
+    bp: Params,
+    cfg: ModelConfig,
+    x_t: jax.Array,  # (B, D)
+    k_buf: jax.Array,  # (B, W, Hkv, hd)
+    v_buf: jax.Array,
+    pos: jax.Array,  # (B,)
+    xk: Optional[jax.Array] = None,
+    xv: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    constrain=None,
+):
+    """Single-token attention against a ring-buffer cache.
+
+    Returns (out: (B,D), new_k: (B,Hkv,hd), new_v).
+    """
+    W = k_buf.shape[1]
+    use_rope = cfg.family != "audio"
+    h = x_t[:, None]  # (B,1,D)
+    q, k, v = L.attn_qkv(bp["attn"], cfg, h)
+    if use_rope:
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+    if _DECODE_MODE == "split":
+        # partial softmax over the (sharded) cache, exact self term,
+        # log-sum-exp merge — no (W+1)-concat resharding of the cache
+        o = L.sdpa_decode_split(
+            q, k, v, k_buf, v_buf,
+            kv_positions=ring_positions(pos, W),
+            kv_valid=ring_valid(pos, W),
+            q_pos=pos,
+            constrain=constrain,
+        )
+    else:
+        kv_pos = jnp.concatenate([ring_positions(pos, W), pos[:, None]], axis=1)
+        valid = jnp.concatenate(
+            [ring_valid(pos, W), jnp.ones((pos.shape[0], 1), bool)], axis=1
+        )
+        k_all = jnp.concatenate([k_buf, k], axis=1)
+        v_all = jnp.concatenate([v_buf, v], axis=1)
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            o = kops.decode_attention(q, k_all, v_all, kv_pos, valid, pos)
+        else:
+            o = L.sdpa(
+                q, k_all, v_all, causal=True,
+                q_positions=pos[:, None], kv_positions=kv_pos, kv_valid=valid,
+            )
+    out = L.attn_out(bp["attn"], cfg, o)[:, 0]
+    if cfg.is_encoder_decoder and xk is not None:
+        hx = L.rms_norm(x_t + out, bp["norm_x"], cfg.norm_eps)[:, None]
+        qx, _, _ = L.attn_qkv(bp["xattn"], cfg, hx)
+        ox = L.sdpa(qx, xk, xv, causal=False)
+        out = out + L.attn_out(bp["xattn"], cfg, ox)[:, 0]
+    return out, k[:, 0], v[:, 0]
+
+
+def forward_decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B,) int32
+    cache: Dict[str, jax.Array],
+    *,
+    use_pallas: bool = False,
+    constrain=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. Returns (logits: (B, V), updated cache)."""
+    pos = cache["pos"]
+    x = params["embed"][token]  # (B, D)
+    Bsz = x.shape[0]
+    if cfg.is_encoder_decoder:
+        # Learned decoder positions, clamped to the positional cap.
+        idx = jnp.clip(pos, 0, cfg.max_target_positions - 1)
+        x = x + params["dec_pos"][idx]
+    new_cache = dict(cache)
+    shared = params.get("shared_attn")
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+
+        def body(h, inp):
+            bp, k_buf, v_buf, xk, xv = inp
+            a = L.rms_norm(h, bp["norm1"], cfg.norm_eps)
+            o, nk, nv = _attn_decode(
+                bp, cfg, a, k_buf, v_buf, pos, xk, xv, use_pallas,
+                constrain=constrain,
+            )
+            h = h + o
+            h2 = L.rms_norm(h, bp["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y = MOE.moe_decode(bp["moe"], cfg, h2)
+                if cfg.dense_residual:
+                    y = y + L.mlp(bp["dense_mlp"], cfg, h2)
+            else:
+                y = L.mlp(bp["mlp"], cfg, h2)
+            return h + y, (nk, nv)
+
+        if not cfg.is_encoder_decoder:
+            def body_noenc(h, inp):
+                bp, k_buf, v_buf = inp
+                return body(h, (bp, k_buf, v_buf, None, None))
+
+            x, (nk, nv) = _scan(
+                body_noenc, x, (params["blocks"], cache["k"], cache["v"])
+            )
+        else:
+            x, (nk, nv) = _scan(
+                body, x, (params["blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+            )
+        new_cache["k"] = jax.vmap(ring_write, in_axes=(0, 0, None))(cache["k"], nk, pos)
+        new_cache["v"] = jax.vmap(ring_write, in_axes=(0, 0, None))(cache["v"], nv, pos)
+
+    elif cfg.family in ("ssm", "hybrid"):
+        n_apps = num_attn_layers(cfg)
+
+        def body(h, inp):
+            bp, conv_s, ssd_s, idx = inp
+            ys = {}
+            if cfg.family == "hybrid":
+                app = idx // cfg.attn_every
+                k_buf = jax.lax.dynamic_index_in_dim(cache["k"], app, keepdims=False)
+                v_buf = jax.lax.dynamic_index_in_dim(cache["v"], app, keepdims=False)
+
+                def with_attn(h):
+                    a = L.rms_norm(h, shared["norm1"], cfg.norm_eps)
+                    o, nk, nv = _attn_decode(
+                        shared, cfg, a, k_buf, v_buf, pos, None, None,
+                        use_pallas, constrain=constrain,
+                    )
+                    h2in = h + o
+                    m = L.rms_norm(h2in, shared["norm2"], cfg.norm_eps)
+                    return h2in + L.mlp(shared["mlp"], cfg, m), nk, nv
+
+                def without_attn(h):
+                    zk = jnp.zeros((Bsz, cfg.num_kv_heads, cfg.head_dim), h.dtype)
+                    return h, zk, zk
+
+                h, nk, nv = jax.lax.cond(
+                    idx % cfg.attn_every == 0, with_attn, without_attn, h
+                )
+                ys["nk"], ys["nv"] = nk, nv
+            u = L.rms_norm(h, bp["norm"], cfg.norm_eps)
+            out, conv_s, ssd_s = SSM.mamba_decode(bp["mamba"], cfg, u, conv_s, ssd_s)
+            h = h + out
+            ys["conv"], ys["ssd"] = conv_s, ssd_s
+            return h, ys
+
+        x, ys = _scan(
+            body,
+            x,
+            (
+                params["blocks"],
+                cache["conv"],
+                cache["ssd"],
+                jnp.arange(cfg.num_layers, dtype=jnp.int32),
+            ),
+        )
+        new_cache["conv"], new_cache["ssd"] = ys["conv"], ys["ssd"]
+        if cfg.family == "hybrid":
+            fired = jnp.nonzero(
+                jnp.arange(cfg.num_layers) % cfg.attn_every == 0, size=n_apps
+            )[0]
+            nk, nv = ys["nk"][fired], ys["nv"][fired]
+            new_cache["k"] = jax.vmap(ring_write, in_axes=(0, 0, None))(cache["k"], nk, pos)
+            new_cache["v"] = jax.vmap(ring_write, in_axes=(0, 0, None))(cache["v"], nv, pos)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting
+# ---------------------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    D = cfg.d_model
+    n = cfg.vocab_size * D * 2 + D  # embed + lm_head + final norm
+    if cfg.family in ("dense", "vlm"):
+        per = 2 * D + L.attn_param_count(cfg) + L.mlp_param_count(cfg)
+        n += cfg.num_layers * per
+    elif cfg.family == "moe":
+        per = 2 * D + L.attn_param_count(cfg) + MOE.moe_param_count(cfg, active_only)
+        if cfg.dense_residual:
+            per += L.mlp_param_count(cfg)
+        n += cfg.num_layers * per
+    elif cfg.family == "ssm":
+        n += cfg.num_layers * (D + SSM.mamba_param_count(cfg))
+    elif cfg.family == "hybrid":
+        n += cfg.num_layers * (D + SSM.mamba_param_count(cfg))
+        n += 2 * D + L.attn_param_count(cfg) + L.mlp_param_count(cfg)  # shared
+    elif cfg.family == "audio":
+        enc_per = 2 * D + L.attn_param_count(cfg) + L.mlp_param_count(cfg)
+        dec_per = 3 * D + 2 * L.attn_param_count(cfg) + L.mlp_param_count(cfg)
+        n += cfg.encoder_layers * enc_per + cfg.num_layers * dec_per + D
+        n += cfg.encoder_seq * D + cfg.max_target_positions * D
+    return n

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts block: top-k router + capacity-based scatter dispatch.
+
+Dispatch is the static-shape scatter/gather formulation (no (T,E,C)
+one-hot dispatch tensors): each (token, choice) computes its expert and
+slot via a cumulative count, tokens are scattered into per-expert buffers
+(E, C, D), experts run as batched matmuls (sharded over the model axis —
+XLA inserts the all-to-all-style resharding), and results gather back
+weighted by router gates. Top-1 choices are ranked before top-2 so they
+are never dropped first. Matches Switch/GShard capacity semantics with
+capacity_factor 1.25.
+
+Arctic additionally runs a dense SwiGLU residual path in parallel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+CAPACITY_FACTOR = 1.25
+
+# Sequence chunking for dispatch (§Perf hillclimb): the (E, C, D) expert
+# buffers scale with the TOKEN count; at prefill_32k/train_4k scale they
+# dominate peak temp memory (arctic: ~1.9 TB/device unchunked). Splitting
+# the token axis into N chunks scans the dispatch+compute, dividing peak
+# buffer memory by N at identical total FLOPs. 1 = off (baseline).
+_SEQ_CHUNKS = 1
+
+
+def set_moe_seq_chunks(n: int) -> None:
+    global _SEQ_CHUNKS
+    _SEQ_CHUNKS = max(1, int(n))
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    scale = D ** -0.5
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dt),
+        "wu": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dt),
+        "wd": (jax.random.normal(ks[3], (E, F, D), jnp.float32) * (F ** -0.5)).astype(dt),
+    }
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    cap = int(CAPACITY_FACTOR * num_tokens * cfg.experts_per_token / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to multiple of 8
+
+
+def moe_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    capacity: Optional[int] = None,
+    constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out: (B,S,D), aux_loss scalar fp32)."""
+    Bsz, S, D = x.shape
+    T = Bsz * S
+    nc = _SEQ_CHUNKS
+    if nc > 1 and T % nc == 0 and T // nc >= 8:
+        # honor the dry-run's full-unroll mode so XLA cost analysis sees
+        # every chunk (a while-loop body is counted once)
+        from repro.models import model as _model
+
+        unroll = nc if _model._SCAN_UNROLL > 1 else 1
+        xt = x.reshape(nc, T // nc, D)
+
+        def body(_, xc):
+            return None, _moe_tokens(p, cfg, xc, capacity, constrain)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xt, unroll=unroll)
+        return ys.reshape(Bsz, S, D), jnp.mean(auxs)
+    y, aux = _moe_tokens(p, cfg, x.reshape(T, D), capacity, constrain)
+    return y.reshape(Bsz, S, D), aux
+
+
+def _moe_tokens(
+    p: Params,
+    cfg: ModelConfig,
+    xt: jax.Array,  # (T, D)
+    capacity: Optional[int] = None,
+    constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    if constrain is None:
+        constrain = lambda name, v: v
+    T, D = xt.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity if capacity is not None else moe_capacity(cfg, T)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- slot assignment: rank assignments (choice-major so top-1 wins) ----
+    flat_expert = expert_ids.T.reshape(T * K)  # choice-major: (K,T) flattened
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (KT, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot  # rank among same-expert assigns
+    slot = jnp.sum(ranks * onehot, axis=-1)  # (KT,)
+    keep = slot < C
+
+    # --- scatter tokens into expert buffers --------------------------------
+    token_ids = jnp.tile(jnp.arange(T, dtype=jnp.int32), K)
+    src = xt[token_ids] * keep[:, None].astype(xt.dtype)
+    # Dropped assignments write to a sacrificial slot C (buffer has C+1).
+    write_slot = jnp.where(keep, slot, C).astype(jnp.int32)
+    buf = jnp.zeros((E, C + 1, D), xt.dtype)
+    buf = buf.at[flat_expert, write_slot].add(src)
+    buf = constrain("moe_buf", buf[:, :C])
+
+    # --- expert compute (batched over E; sharded over model axis when E
+    # divides it, else the capacity dim carries the data axes — without
+    # the constraint GSPMD replicates the (E,C,D) buffers and all-reduces
+    # them whole (§Perf hillclimb, mixtral prefill) ----------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wu"]
+    )
+    h = constrain("moe_h", h)
+    out_buf = constrain("moe_buf", jnp.einsum("ecf,efd->ecd", h, p["wd"]))
+
+    # --- gather back, weighted by gates -------------------------------------
+    out_flat = constrain("moe_tokens", out_buf[flat_expert, write_slot])
+    gates_flat = gate_vals.T.reshape(T * K)
+    out_flat = out_flat * (gates_flat * keep).astype(out_flat.dtype)[:, None]
+    y = jnp.zeros((T, D), out_flat.dtype).at[token_ids].add(out_flat)
+
+    # --- load-balance aux loss (Switch): E * sum_e f_e * P_e ---------------
+    me = jnp.mean(probs, axis=0)  # (E,)
+    assigned = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(assigned, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    return y, aux
+
+
+def moe_decode(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, D) — single token per sequence
+) -> jax.Array:
+    """Decode-time MoE: the same dispatch path with a one-token sequence.
+
+    At decode the per-expert buffers are tiny (capacity ~= B*K/E), so the
+    expert matmuls are weight-bandwidth-bound — every expert's weights are
+    still read. The roofline analysis flags exactly this regime for MoE
+    decode shapes.
+    """
+    y, _ = moe_block(p, cfg, x[:, None, :])
+    return y[:, 0, :]
+
+
+def moe_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    E = cfg.experts_per_token if active_only else cfg.num_experts
+    n = cfg.d_model * cfg.num_experts  # router
+    n += E * 3 * cfg.d_model * cfg.d_ff
+    return n

@@ -1,0 +1,254 @@
+"""Mamba2 (SSD — state-space duality) blocks in pure JAX.
+
+Follows arXiv:2405.21060: the block projects the residual stream into
+(z, x, B, C, dt), applies a short causal depthwise conv to (x, B, C),
+then runs the SSD recurrence
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t x_t^T        (per head h)
+    y_t = C_t . S_t + D_h * x_t
+
+computed in the chunked dual form for train/prefill and as a one-step
+recurrence for decode. ``ssd_chunked`` here is the pure-jnp oracle that
+``repro.kernels.ssd_scan`` (Pallas) is validated against.
+
+n_groups = 1: B and C are shared across heads.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.kv_cache import conv_dim
+
+Params = Dict[str, jax.Array]
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = cfg.d_inner
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[2], (H,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, conv_dim(cfg)), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),  # inverse softplus
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(ks[1], d_in, cfg.d_model, dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * N :]
+    assert dt_raw.shape[-1] == H
+    return z, xbc, dt_raw
+
+
+def causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with window len(w)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(K):  # K is tiny (4); unrolled adds fuse well
+        out = out + pad[:, i : i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def conv_decode_step(
+    xbc_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """One conv step. xbc_t: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, xbc_t[:, None]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc_t.dtype)
+    new_state = window[:, 1:]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD — chunked dual form (pure-jnp oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(loga: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<k<=i} loga_k.
+
+    loga: (..., Q). Returns (..., Q, Q) with -inf above the diagonal.
+    """
+    Q = loga.shape[-1]
+    cum = jnp.cumsum(loga, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H)  post-softplus, > 0
+    A: jax.Array,        # (H,)       negative
+    B_: jax.Array,       # (B, S, N)
+    C_: jax.Array,       # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    f32 = jnp.float32
+    xw = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(Bsz, nc, Q, H, P)
+    loga = (dt.astype(f32) * A.astype(f32)).reshape(Bsz, nc, Q, H)  # log decay
+    Bc = B_.astype(f32).reshape(Bsz, nc, Q, N)
+    Cc = C_.astype(f32).reshape(Bsz, nc, Q, N)
+
+    # --- intra-chunk (dual / attention-like form) --------------------------
+    L = jnp.exp(_segsum(jnp.moveaxis(loga, -1, -2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bchij,bcij,bcjhp->bcihp", L, scores, xw)
+
+    # --- chunk-final states -------------------------------------------------
+    cum = jnp.cumsum(loga, axis=2)  # (B,nc,Q,H)
+    total = cum[:, :, -1]  # (B,nc,H)
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end, xw)
+
+    # --- inter-chunk recurrence over chunk states ---------------------------
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), f32)
+
+    def step(carry, inp):
+        tot, cs = inp  # tot: (B,H); cs: (B,H,P,N)
+        new = carry * jnp.exp(tot)[..., None, None] + cs
+        return new, carry  # emit state *entering* the chunk
+
+    total_t = jnp.moveaxis(total, 1, 0)  # (nc,B,H)
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)  # (nc,B,H,P,N)
+    final_state, entering = jax.lax.scan(step, init_state, (total_t, cs_t))
+    entering = jnp.moveaxis(entering, 0, 1)  # (B,nc,H,P,N)
+
+    # --- inter-chunk output contribution ------------------------------------
+    decay_from_start = jnp.exp(cum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", Cc, decay_from_start, entering
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    x_t: jax.Array,    # (B, H, P)
+    dt_t: jax.Array,   # (B, H)
+    A: jax.Array,      # (H,)
+    B_t: jax.Array,    # (B, N)
+    C_t: jax.Array,    # (B, N)
+    state: jax.Array,  # (B, H, P, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    f32 = jnp.float32
+    decay = jnp.exp(dt_t.astype(f32) * A.astype(f32))  # (B,H)
+    xw = x_t.astype(f32) * dt_t.astype(f32)[..., None]  # (B,H,P)
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xw, B_t.astype(f32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(
+    p: Params,
+    cfg: ModelConfig,
+    u: jax.Array,  # (B, S, d_model) — already normed residual stream
+    init_state: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Train/prefill path.
+
+    Returns (out: (B,S,d_model), final ssd state: (B,H,P,N),
+    conv tail: (B, conv_width-1, conv_dim) — raw inputs for decode).
+    """
+    Bsz, S, _ = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, S - (cfg.conv_width - 1) :, :]
+    xbc = causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x = xbc[..., : cfg.d_inner].reshape(Bsz, S, H, P)
+    B_ = xbc[..., cfg.d_inner : cfg.d_inner + N]
+    C_ = xbc[..., cfg.d_inner + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        y, final_state = kops.ssd_scan(x, dt, A, B_, C_, cfg.ssm_chunk, init_state)
+    else:
+        y, final_state = ssd_chunked(x, dt, A, B_, C_, cfg.ssm_chunk, init_state)
+    y = y + x * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    from repro.models.layers import gated_rms_norm
+
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], final_state, conv_tail
+
+
+def mamba_decode(
+    p: Params,
+    cfg: ModelConfig,
+    u_t: jax.Array,  # (B, d_model)
+    conv_state: jax.Array,
+    ssd_state: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. Returns (out: (B,d_model), conv_state, ssd_state)."""
+    Bsz = u_t.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = u_t @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = conv_decode_step(xbc, conv_state, p["conv_w"], p["conv_b"])
+    x = xbc[..., : cfg.d_inner].reshape(Bsz, H, P)
+    B_t = xbc[..., cfg.d_inner : cfg.d_inner + N]
+    C_t = xbc[..., cfg.d_inner + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssd_state = ssd_decode_step(x, dt, A, B_t, C_t, ssd_state)
+    y = y + x * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(Bsz, cfg.d_inner)
+    from repro.models.layers import gated_rms_norm
+
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssd_state
+
+
+def mamba_param_count(cfg: ModelConfig) -> int:
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    d_in = cfg.d_inner
+    proj_out = 2 * d_in + 2 * N + H
+    n = cfg.d_model * proj_out
+    n += cfg.conv_width * conv_dim(cfg) + conv_dim(cfg)
+    n += H * 3  # A_log, dt_bias, D
+    n += d_in  # norm
+    n += d_in * cfg.d_model
+    return n

@@ -1,0 +1,1 @@
+"""Serving runtime: engine, cluster simulator, workload, profiles, baselines."""

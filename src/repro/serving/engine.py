@@ -1,0 +1,97 @@
+"""Real JAX serving engine: batched prefill + greedy decode.
+
+This is the execution layer the examples drive on CPU with reduced
+configs (on TPU it is the per-slice executable Shabari's "containers"
+wrap). Requests are token prompts; the engine pads them into a batch,
+prefills the ring cache, then decodes step by step with the same
+``forward_decode`` the dry-run lowers for the decode shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_decode, forward_prefill, init_params
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[List[int]]
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, cache_window: int = 256,
+                 seed: int = 0, use_pallas: bool = False):
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            jax.random.PRNGKey(seed), cfg)
+        self.cache_window = cache_window
+        self.use_pallas = use_pallas
+
+        def _prefill(params, tokens, **kw):
+            return forward_prefill(params, cfg, tokens,
+                                   cache_window=cache_window,
+                                   use_pallas=use_pallas, **kw)
+
+        def _decode(params, token, cache):
+            return forward_decode(params, cfg, token, cache,
+                                  use_pallas=use_pallas)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def _pad_batch(self, prompts: Sequence[Sequence[int]]) -> Tuple[jnp.ndarray, np.ndarray]:
+        # left-pad to align last positions (prefill logits are last-token)
+        L = max(len(p) for p in prompts)
+        if self.cfg.family in ("ssm", "hybrid"):
+            L = int(np.ceil(L / self.cfg.ssm_chunk) * self.cfg.ssm_chunk)
+        arr = np.zeros((len(prompts), L), np.int32)
+        lens = np.array([len(p) for p in prompts])
+        for i, p in enumerate(prompts):
+            arr[i, L - len(p):] = np.asarray(p, np.int32)
+        return jnp.asarray(arr), lens
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 32,
+                 frame_embeds=None, patch_embeds=None) -> GenerationResult:
+        cfg = self.cfg
+        tokens, _ = self._pad_batch(prompts)
+        kw = {}
+        if cfg.is_encoder_decoder:
+            B = tokens.shape[0]
+            kw["frame_embeds"] = (
+                frame_embeds if frame_embeds is not None
+                else jnp.zeros((B, cfg.encoder_seq, cfg.d_model), cfg.dtype))
+        if cfg.family == "vlm":
+            B = tokens.shape[0]
+            kw["patch_embeds"] = (
+                patch_embeds if patch_embeds is not None
+                else jnp.zeros((B, cfg.frontend_tokens, cfg.d_model), cfg.dtype))
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, tokens, **kw)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        out = [[] for _ in prompts]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        t1 = time.perf_counter()
+        for _ in range(max_new_tokens):
+            for i, t in enumerate(np.asarray(tok)):
+                out[i].append(int(t))
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        t_decode = time.perf_counter() - t1
+        tps = len(prompts) * max_new_tokens / max(t_decode, 1e-9)
+        return GenerationResult(out, t_prefill, t_decode, tps)

@@ -1,0 +1,126 @@
+"""End-to-end experiment runner: trace -> policy -> simulator -> summary.
+
+One call reproduces one bar of the paper's Figure 8 (a policy at an RPS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving import baselines as B
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import (
+    InvocationResult,
+    SimConfig,
+    Simulator,
+    summarize,
+)
+from repro.serving.workload import generate_trace
+
+POLICIES = (
+    "static-medium",
+    "static-large",
+    "parrotfish",
+    "aquatope",
+    "cypress",
+    "shabari",
+    "shabari-openwhisk-sched",  # Fig. 10 ablation: allocator w/o scheduler
+    "shabari-proportional",     # Fig. 7a ablation
+    "shabari-packing",          # Fig. 7b ablation
+)
+
+
+def make_policy(name: str, profiles, pool, slo_table, seed: int = 0):
+    from repro.core.cost_functions import proportional_vcpu_costs
+
+    if name == "static-medium":
+        return B.StaticPolicy(12, 3 * 1024, "static-medium")
+    if name == "static-large":
+        return B.StaticPolicy(20, 5 * 1024, "static-large")
+    if name == "parrotfish":
+        return B.ParrotfishPolicy(profiles, pool, seed=seed)
+    if name == "aquatope":
+        return B.AquatopePolicy(
+            profiles, pool, lambda fn, idx: slo_table[(fn, idx)], seed=seed
+        )
+    if name == "cypress":
+        return B.CypressPolicy(profiles, pool, seed=seed)
+    if name == "shabari":
+        return B.ShabariPolicy()
+    if name == "shabari-openwhisk-sched":
+        p = B.ShabariPolicy()
+        p.name = "shabari-openwhisk-sched"
+        p.uses_shabari_scheduler = False
+        return p
+    if name == "shabari-proportional":
+        p = B.ShabariPolicy(vcpu_cost_fn=proportional_vcpu_costs)
+        p.name = "shabari-proportional"
+        return p
+    if name == "shabari-packing":
+        p = B.ShabariPolicy()
+        p.name = "shabari-packing"
+        p.placement = "packing"
+        return p
+    if name in ("shabari-one-hot", "shabari-per-input-type"):
+        return B.FormulationPolicy(name.replace("shabari-", ""), profiles)
+    raise ValueError(name)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    policy: str
+    rps: float
+    summary: Dict[str, float]
+    results: List[InvocationResult]
+    container_sizes: Dict[str, int]
+
+
+def run_experiment(
+    policy_name: str,
+    *,
+    rps: float = 4.0,
+    duration_s: float = 600.0,
+    seed: int = 0,
+    slo_multiplier: float = 1.4,
+    sim_cfg: Optional[SimConfig] = None,
+    vcpu_confidence: Optional[int] = None,
+    mem_confidence: Optional[int] = None,
+    keep_results: bool = False,
+) -> ExperimentResult:
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)  # input pool fixed across policies
+    slo_table = B.build_slo_table(profiles, pool, multiplier=slo_multiplier)
+    policy = make_policy(policy_name, profiles, pool, slo_table, seed=seed)
+    if vcpu_confidence is not None and hasattr(policy, "allocator"):
+        policy.allocator.vcpu_confidence = vcpu_confidence
+    if mem_confidence is not None and hasattr(policy, "allocator"):
+        policy.allocator.mem_confidence = mem_confidence
+
+    # Baselines that keep OpenWhisk's memory-centric load accounting get a
+    # per-worker vCPU limit of +inf (vCPUs oversubscribe, §5 reason 3).
+    cfg = sim_cfg or SimConfig(seed=seed)
+    if not policy.uses_shabari_scheduler:
+        cfg = dataclasses.replace(cfg, vcpu_limit=10_000)
+
+    trace = generate_trace(
+        rps=rps,
+        functions=sorted(profiles.keys()),
+        inputs_per_function={f: len(pool[f]) for f in profiles},
+        duration_s=duration_s,
+        seed=seed,
+    )
+    sim = Simulator(
+        policy=policy, profiles=profiles, input_pool=pool,
+        slo_table=slo_table, cfg=cfg,
+    )
+    results = sim.run(trace)
+    summary = summarize(results)
+    sizes = {fn: len(s) for fn, s in sim.container_sizes.items()}
+    return ExperimentResult(
+        policy=policy_name, rps=rps, summary=summary,
+        results=results if keep_results else [],
+        container_sizes=sizes,
+    )

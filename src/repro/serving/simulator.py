@@ -1,0 +1,356 @@
+"""Discrete-event cluster simulator — the stand-in for the paper's
+17-node OpenWhisk testbed (§7.1).
+
+The policies, allocator, featurizer, scheduler, daemon, and metadata
+store are the REAL implementations from ``repro.core``; the simulator
+only supplies what the hardware supplied in the paper: time, utilization
+and contention. Modeled effects, each tied to a paper observation:
+
+* cold starts: container create latency grows with container size;
+* vCPU contention: when the sum of ACTIVE parallel demand on a worker
+  exceeds its physical cores, co-located invocations slow down
+  proportionally (why static-large still violates SLOs, §7.2);
+* network contention: object-store-fed functions (matmult, lrtrain,
+  imageprocess, compress, ...) share a 10 Gb NIC per worker — the effect
+  that sinks Hermod-style packing (Figure 7b);
+* OOM kills: an invocation whose footprint exceeds its allocation dies
+  partway through (§4.3.2 safeguards exist because of this);
+* queueing + timeouts: invocations that cannot be placed retry and
+  eventually time out (the §7.5 oversubscription study).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import Cluster, Container, Worker
+from repro.core.cost_functions import Observation
+from repro.core.daemon import UtilizationTrace, WorkerDaemon, synth_trace
+from repro.core.metadata_store import MetadataStore
+from repro.serving.profiles import FunctionProfile, input_size_mb
+from repro.serving.workload import Arrival
+
+# functions that pull inputs over the network from the object store (§5)
+NETWORK_FED = {"matmult", "lrtrain", "imageprocess", "compress",
+               "videoprocess", "speech2text", "resnet50", "mobilenet"}
+NIC_GBPS = 10.0
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_workers: int = 16
+    vcpus_per_worker: int = 90
+    physical_cores: int = 96
+    mem_mb_per_worker: int = 125 * 1024
+    vcpu_limit: int = 90
+    cold_base_s: float = 0.45
+    cold_per_gb_s: float = 0.12
+    sched_overhead_s: float = 0.001
+    retry_interval_s: float = 0.5
+    queue_timeout_s: float = 300.0
+    keep_alive_s: float = 600.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class InvocationResult:
+    invocation_id: int
+    function: str
+    arrival_t: float
+    start_t: float = 0.0
+    finish_t: float = 0.0
+    exec_s: float = 0.0
+    slo_s: float = 0.0
+    alloc_vcpus: int = 0
+    alloc_mem_mb: int = 0
+    used_vcpus: float = 0.0
+    used_mem_mb: float = 0.0
+    cold_start: bool = False
+    cold_latency_s: float = 0.0
+    queued_s: float = 0.0
+    oom_killed: bool = False
+    timed_out: bool = False
+
+    @property
+    def slo_violated(self) -> bool:
+        if self.timed_out or self.oom_killed:
+            return True
+        return (self.finish_t - self.arrival_t) > self.slo_s + 1e-9
+
+    @property
+    def wasted_vcpus(self) -> float:
+        return max(self.alloc_vcpus - self.used_vcpus, 0.0)
+
+    @property
+    def wasted_mem_mb(self) -> float:
+        return max(self.alloc_mem_mb - self.used_mem_mb, 0.0)
+
+
+class Policy:
+    """Interface each resource-management system implements."""
+
+    name = "base"
+    uses_shabari_scheduler = True
+
+    def allocate(self, arrival: Arrival, meta: Dict, sim: "Simulator"):
+        raise NotImplementedError
+
+    def feedback(self, arrival: Arrival, meta: Dict, result: InvocationResult,
+                 sim: "Simulator") -> None:
+        pass
+
+
+@dataclasses.dataclass
+class _Running:
+    result: InvocationResult
+    container: Container
+    worker: Worker
+    demand_vcpus: float
+    net_gbps: float
+
+
+class Simulator:
+    def __init__(
+        self,
+        *,
+        policy: Policy,
+        profiles: Dict[str, FunctionProfile],
+        input_pool: Dict[str, List[Dict]],
+        slo_table: Dict[Tuple[str, int], float],
+        cfg: Optional[SimConfig] = None,
+    ):
+        self.cfg = cfg or SimConfig()
+        self.policy = policy
+        self.profiles = profiles
+        self.input_pool = input_pool
+        self.slo_table = slo_table
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.cluster = Cluster(
+            n_workers=self.cfg.n_workers,
+            vcpus_per_worker=self.cfg.vcpus_per_worker,
+            mem_mb_per_worker=self.cfg.mem_mb_per_worker,
+            vcpu_limit=self.cfg.vcpu_limit,
+        )
+        from repro.core.scheduler import ShabariScheduler
+
+        placement = getattr(policy, "placement", "hashing")
+        shabari_sched = getattr(policy, "uses_shabari_scheduler", True)
+        self.scheduler = ShabariScheduler(
+            self.cluster, placement=placement,
+            keep_alive_s=self.cfg.keep_alive_s, seed=self.cfg.seed,
+            route_larger=shabari_sched, background_launch=shabari_sched,
+        )
+        self.store = MetadataStore()
+        self.daemon = WorkerDaemon(self.store)
+        self.results: List[InvocationResult] = []
+        self.container_sizes: Dict[str, set] = {}
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self._running: Dict[int, _Running] = {}
+        self.now = 0.0
+
+    # ------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    # ------------------------------------------------------------ helpers
+    def cold_latency(self, vcpus: int, mem_mb: int) -> float:
+        jitter = float(self.rng.lognormal(0.0, 0.15))
+        return (self.cfg.cold_base_s + self.cfg.cold_per_gb_s * mem_mb / 1024.0) * jitter
+
+    def _contention(self, w: Worker, fn: str, extra_demand: float,
+                    extra_net: float) -> float:
+        demand = extra_demand + sum(
+            r.demand_vcpus for r in self._running.values() if r.worker is w
+        )
+        cpu_slow = max(1.0, demand / self.cfg.physical_cores)
+        net = extra_net + sum(
+            r.net_gbps for r in self._running.values() if r.worker is w
+        )
+        net_slow = max(1.0, net / NIC_GBPS) if fn in NETWORK_FED else 1.0
+        return max(cpu_slow, net_slow)
+
+    def _net_demand(self, fn: str, meta: Dict, exec_s: float) -> float:
+        if fn not in NETWORK_FED or exec_s <= 0:
+            return 0.0
+        bits = input_size_mb(fn, meta) * 8e6
+        return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
+
+    # ------------------------------------------------------------ handlers
+    def _on_arrival(self, arrival: Arrival, first_seen: float) -> None:
+        meta = self.input_pool[arrival.function][arrival.input_idx]
+        alloc = self.policy.allocate(arrival, meta, self)
+        now = self.now
+        if now - first_seen > self.cfg.queue_timeout_s:
+            res = InvocationResult(
+                invocation_id=arrival.invocation_id, function=arrival.function,
+                arrival_t=first_seen, start_t=now, finish_t=now,
+                slo_s=self.slo_table[(arrival.function, arrival.input_idx)],
+                alloc_vcpus=alloc.vcpus, alloc_mem_mb=alloc.mem_mb,
+                timed_out=True,
+            )
+            self.results.append(res)
+            return
+
+        decision = self.scheduler.schedule(arrival.function, alloc, now)
+        if decision.queued:
+            self._push(now + self.cfg.retry_interval_s, "arrival",
+                       (arrival, first_seen))
+            return
+
+        if decision.background_launch and decision.container is not None:
+            # case 2: larger warm container used; exact size in background
+            w, v, m = decision.background_launch
+            c = self.cluster.new_container(
+                w, arrival.function, v, m, now,
+                warm_at=now + self.cold_latency(v, m),
+            )
+            self._note_size(arrival.function, v, m)
+
+        if decision.container is not None:
+            self._start(arrival, meta, alloc, decision.container,
+                        cold=False, first_seen=first_seen)
+        else:
+            # cold start: create the container, start when warm
+            w, v, m = decision.background_launch
+            lat = self.cold_latency(v, m)
+            c = self.cluster.new_container(w, arrival.function, v, m, now,
+                                           warm_at=now + lat)
+            c.busy = True
+            self._note_size(arrival.function, v, m)
+            self._push(now + lat, "warm_start",
+                       (arrival, meta, alloc, c, lat, first_seen))
+
+    def _note_size(self, fn: str, v: int, m: int) -> None:
+        self.container_sizes.setdefault(fn, set()).add((v, m))
+
+    def _start(self, arrival, meta, alloc, container: Container, *, cold: bool,
+               first_seen: float, cold_latency: float = 0.0) -> None:
+        now = self.now
+        fn = arrival.function
+        prof = self.profiles[fn]
+        w = container.worker
+        container.busy = True
+        container.last_used = now
+        w.acquire(container.vcpus, container.mem_mb)
+
+        # the invocation runs with the CONTAINER's size (may exceed request)
+        vcpus = container.vcpus
+        base_exec = prof.exec_time(meta, vcpus, self.rng, contention=1.0)
+        demand = prof.vcpus_used(meta, vcpus)
+        net = self._net_demand(fn, meta, base_exec)
+        slow = self._contention(w, fn, demand, net)
+        exec_s = base_exec * slow
+
+        mem_used = prof.mem_used_mb(meta)
+        oom = mem_used > container.mem_mb
+        if oom:
+            exec_s *= 0.6  # killed partway
+
+        res = InvocationResult(
+            invocation_id=arrival.invocation_id, function=fn,
+            arrival_t=first_seen, start_t=now,
+            slo_s=self.slo_table[(fn, arrival.input_idx)],
+            alloc_vcpus=container.vcpus, alloc_mem_mb=container.mem_mb,
+            used_vcpus=min(demand, vcpus),
+            used_mem_mb=min(mem_used, container.mem_mb),
+            cold_start=cold, cold_latency_s=cold_latency,
+            queued_s=now - first_seen - (cold_latency if cold else 0.0),
+            oom_killed=oom, exec_s=exec_s,
+        )
+        self._running[arrival.invocation_id] = _Running(
+            result=res, container=container, worker=w,
+            demand_vcpus=demand, net_gbps=net,
+        )
+        self._push(now + exec_s, "finish", (arrival, meta))
+
+    def _on_finish(self, arrival: Arrival, meta: Dict) -> None:
+        now = self.now
+        run = self._running.pop(arrival.invocation_id)
+        res, c, w = run.result, run.container, run.worker
+        res.finish_t = now
+        w.release(c.vcpus, c.mem_mb)
+        c.busy = False
+        c.last_used = now
+        self.results.append(res)
+
+        trace = synth_trace(res.used_vcpus, res.used_mem_mb, res.exec_s, self.rng)
+        obs = self.daemon.report_completion(
+            function=res.function, invocation_id=res.invocation_id,
+            features=np.zeros(1, np.float32),  # policy recomputes if needed
+            exec_time_s=now - res.arrival_t,  # end-to-end vs SLO
+            slo_s=res.slo_s, alloc_vcpus=res.alloc_vcpus,
+            alloc_mem_mb=res.alloc_mem_mb, trace=trace,
+            finish_time=now, cold_start=res.cold_start,
+            oom_killed=res.oom_killed,
+        )
+        self.policy.feedback(arrival, meta, res, self)
+
+    # ------------------------------------------------------------ run
+    def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
+        for a in arrivals:
+            self._push(a.t, "arrival", (a, a.t))
+        reap_t = 60.0
+        self._push(reap_t, "reap", None)
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = t
+            if kind == "arrival":
+                arrival, first_seen = payload
+                self._on_arrival(arrival, first_seen)
+            elif kind == "warm_start":
+                arrival, meta, alloc, c, lat, first_seen = payload
+                # container finished cold-starting; run the invocation
+                c.busy = False  # _start re-marks busy + acquires load
+                self._start(arrival, meta, alloc, c, cold=True,
+                            first_seen=first_seen, cold_latency=lat)
+            elif kind == "finish":
+                arrival, meta = payload
+                self._on_finish(arrival, meta)
+            elif kind == "reap":
+                self.scheduler.reap_idle(self.now)
+                if self._events:
+                    self._push(self.now + 60.0, "reap", None)
+        return self.results
+
+
+# ---------------------------------------------------------------------------
+# Metrics (the paper's three evaluation axes, §7.1)
+# ---------------------------------------------------------------------------
+
+
+def summarize(results: List[InvocationResult]) -> Dict[str, float]:
+    if not results:
+        return {}
+    viol = [r for r in results if r.slo_violated]
+    wasted_v = np.array([r.wasted_vcpus for r in results])
+    wasted_m = np.array([r.wasted_mem_mb for r in results])
+    util_v = np.array([
+        r.used_vcpus / r.alloc_vcpus for r in results if r.alloc_vcpus
+    ])
+    util_m = np.array([
+        r.used_mem_mb / r.alloc_mem_mb for r in results if r.alloc_mem_mb
+    ])
+    colds = [r for r in results if r.cold_start]
+    return {
+        "n": len(results),
+        "slo_violation_pct": 100.0 * len(viol) / len(results),
+        "wasted_vcpus_p50": float(np.percentile(wasted_v, 50)),
+        "wasted_vcpus_p95": float(np.percentile(wasted_v, 95)),
+        "wasted_mem_mb_p50": float(np.percentile(wasted_m, 50)),
+        "wasted_mem_mb_p75": float(np.percentile(wasted_m, 75)),
+        "wasted_mem_mb_p95": float(np.percentile(wasted_m, 95)),
+        "cpu_util_p50": float(np.percentile(util_v, 50)) if util_v.size else 0.0,
+        "mem_util_p50": float(np.percentile(util_m, 50)) if util_m.size else 0.0,
+        "cold_start_pct": 100.0 * len(colds) / len(results),
+        "cold_viol_pct": (
+            100.0 * len([r for r in viol if r.cold_start]) / max(len(viol), 1)
+        ),
+        "oom_pct": 100.0 * len([r for r in results if r.oom_killed]) / len(results),
+        "timeout_pct": 100.0 * len([r for r in results if r.timed_out]) / len(results),
+    }

@@ -1,0 +1,80 @@
+"""Azure-trace-style workload generation (paper §7.1).
+
+The paper samples a ten-minute window from the Azure Functions trace
+[Shahrad et al. 2020], randomizes start times within each minute, and
+subsamples to the target RPS. We reproduce the trace's load shape with
+its published characteristics — heavy-tailed per-minute invocation
+counts (most functions rare, a few hot) and bursty minutes — using a
+seeded generator, then apply exactly the paper's per-minute
+start-time randomization and RPS subsampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_inv_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Arrival:
+    invocation_id: int
+    t: float
+    function: str
+    input_idx: int
+
+
+def azure_minute_weights(n_minutes: int, rng: np.random.Generator) -> np.ndarray:
+    """Per-minute relative load: lognormal bursts around a diurnal-ish
+    baseline (the ten-minute windows in the trace show 2-4x swings)."""
+    base = 1.0 + 0.3 * np.sin(np.linspace(0, 2 * np.pi, n_minutes))
+    burst = rng.lognormal(mean=0.0, sigma=0.45, size=n_minutes)
+    w = base * burst
+    return w / w.sum()
+
+
+def function_popularity(functions: Sequence[str], rng: np.random.Generator) -> np.ndarray:
+    """Zipf-like popularity — the trace's hallmark (a few functions
+    dominate invocations)."""
+    ranks = np.arange(1, len(functions) + 1, dtype=np.float64)
+    rng.shuffle(ranks)
+    w = 1.0 / ranks ** 0.9
+    return w / w.sum()
+
+
+def generate_trace(
+    *,
+    rps: float,
+    functions: Sequence[str],
+    inputs_per_function: Dict[str, int],
+    duration_s: float = 600.0,
+    seed: int = 0,
+    uniform_popularity: bool = False,
+) -> List[Arrival]:
+    rng = np.random.default_rng(seed)
+    n_minutes = int(np.ceil(duration_s / 60.0))
+    weights = azure_minute_weights(n_minutes, rng)
+    total = int(round(rps * duration_s))
+    per_minute = rng.multinomial(total, weights)
+    if uniform_popularity:
+        pop = np.full(len(functions), 1.0 / len(functions))
+    else:
+        pop = function_popularity(functions, rng)
+
+    arrivals: List[Arrival] = []
+    for minute, count in enumerate(per_minute):
+        starts = rng.uniform(minute * 60.0, (minute + 1) * 60.0, size=count)
+        starts.sort()
+        fns = rng.choice(len(functions), size=count, p=pop)
+        for t, fi in zip(starts, fns):
+            fn = functions[fi]
+            idx = int(rng.integers(inputs_per_function[fn]))
+            arrivals.append(
+                Arrival(next(_inv_ids), float(t), fn, idx)
+            )
+    arrivals.sort(key=lambda a: a.t)
+    return arrivals

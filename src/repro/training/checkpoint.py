@@ -1,0 +1,91 @@
+"""Checkpointing: msgpack-serialized pytrees with shape/dtype manifest.
+
+No orbax dependency — arrays are flattened by tree path, each leaf
+stored as raw bytes + (shape, dtype), with an atomic rename commit so a
+killed run never leaves a half-written checkpoint. Works for params,
+optimizer state, and data-pipeline step in one bundle.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, *, step: int, params, opt_state=None,
+                    extra: Dict[str, Any] = None) -> str:
+    """Write an atomic checkpoint bundle; returns the final path."""
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    bundles = {"params": _flatten(params)}
+    if opt_state is not None:
+        bundles["opt_state"] = _flatten(opt_state)
+    manifest = {"step": step, "extra": extra or {}, "bundles": {}}
+    payload: Dict[str, bytes] = {}
+    for bname, flat in bundles.items():
+        man = {}
+        for key, arr in flat.items():
+            bkey = f"{bname}:{key}"
+            payload[bkey] = arr.tobytes()
+            man[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        manifest["bundles"][bname] = man
+    blob = msgpack.packb(
+        {"manifest": json.dumps(manifest), "data": payload},
+        use_bin_type=True,
+    )
+    with tempfile.NamedTemporaryFile(
+        dir=out.parent, delete=False, suffix=".tmp"
+    ) as f:
+        f.write(blob)
+        tmp = f.name
+    os.replace(tmp, out)  # atomic commit
+    return str(out)
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    """Returns {step, extra, params, opt_state?} with numpy leaves keyed
+    by tree path (use ``restore_into`` to rebuild a pytree)."""
+    blob = msgpack.unpackb(Path(path).read_bytes(), raw=False)
+    manifest = json.loads(blob["manifest"])
+    out: Dict[str, Any] = {"step": manifest["step"], "extra": manifest["extra"]}
+    for bname, man in manifest["bundles"].items():
+        flat = {}
+        for key, info in man.items():
+            arr = np.frombuffer(
+                blob["data"][f"{bname}:{key}"], dtype=np.dtype(info["dtype"])
+            ).reshape(info["shape"])
+            flat[key] = arr
+        out[bname] = flat
+    return out
+
+
+def restore_into(template, flat: Dict[str, np.ndarray]):
+    """Rebuild a pytree with ``template``'s structure from flat arrays."""
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

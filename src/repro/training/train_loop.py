@@ -1,0 +1,98 @@
+"""Training loop: jit'd step, metrics, periodic checkpointing, resume."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import init_params
+from repro.training.checkpoint import load_checkpoint, restore_into, save_checkpoint
+from repro.training.data import DataConfig, SyntheticTokenPipeline
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 100
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    remat: bool = False  # small models on CPU don't need it
+
+
+def train(
+    cfg: ModelConfig,
+    *,
+    data_cfg: DataConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    loop: Optional[TrainLoopConfig] = None,
+    resume_from: Optional[str] = None,
+    extra_batch_fn: Optional[Callable[[int], Dict]] = None,
+) -> Dict[str, List[float]]:
+    """Train; returns the metric history. CPU-friendly for the examples
+    (reduced configs, ~100M params, a few hundred steps)."""
+    from repro.models.model import forward_train
+
+    loop = loop or TrainLoopConfig()
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps)
+    pipe = SyntheticTokenPipeline(data_cfg)
+
+    key = jax.random.PRNGKey(loop.seed)
+    params = init_params(key, cfg)
+    opt_state = init_opt_state(opt_cfg, params)
+    start_step = 0
+    if resume_from:
+        bundle = load_checkpoint(resume_from)
+        params = restore_into(params, bundle["params"])
+        opt_state = restore_into(opt_state, bundle["opt_state"])
+        start_step = bundle["step"]
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            return forward_train(
+                p, cfg, batch["tokens"], batch["labels"],
+                patch_embeds=batch.get("patch_embeds"),
+                frame_embeds=batch.get("frame_embeds"),
+                remat=loop.remat,
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        return params, opt_state, dict(metrics, loss=loss, **opt_metrics)
+
+    history: Dict[str, List[float]] = {"step": [], "loss": [], "grad_norm": [],
+                                       "tokens_per_s": []}
+    t_last = time.time()
+    for step in range(start_step, loop.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        if extra_batch_fn is not None:
+            batch.update(extra_batch_fn(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % loop.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.time() - t_last
+            tps = data_cfg.batch_size * data_cfg.seq_len * loop.log_every / max(dt, 1e-9)
+            t_last = time.time()
+            history["step"].append(step + 1)
+            history["loss"].append(loss)
+            history["grad_norm"].append(gn)
+            history["tokens_per_s"].append(tps)
+            print(f"step {step+1:5d} loss={loss:.4f} grad_norm={gn:.3f} tok/s={tps:,.0f}")
+        if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+            path = Path(loop.ckpt_dir) / f"ckpt_{step+1:06d}.msgpack"
+            save_checkpoint(str(path), step=step + 1, params=params,
+                            opt_state=opt_state)
+    history["final_params"] = params  # type: ignore[assignment]
+    return history

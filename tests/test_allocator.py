@@ -1,0 +1,126 @@
+"""Unit + property tests for the CSOAA allocator and cost functions."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.allocator import Allocation, OnlineCSC, ResourceAllocator
+from repro.core.cost_functions import (
+    Observation,
+    absolute_vcpu_costs,
+    memory_costs,
+    proportional_vcpu_costs,
+)
+
+
+def _obs(exec_s, slo_s, alloc_v, used_v, alloc_m=2048, used_m=1024, oom=False):
+    return Observation(
+        exec_time_s=exec_s, slo_s=slo_s, alloc_vcpus=alloc_v,
+        max_vcpus_used=used_v, alloc_mem_mb=alloc_m, max_mem_used_mb=used_m,
+        oom_killed=oom,
+    )
+
+
+# ----------------------------------------------------------------- costs
+@given(
+    exec_s=st.floats(0.05, 120.0),
+    slo_s=st.floats(0.1, 120.0),
+    alloc_v=st.integers(1, 32),
+    used_frac=st.floats(0.01, 1.0),
+    n=st.sampled_from([16, 32]),
+    fn=st.sampled_from([absolute_vcpu_costs, proportional_vcpu_costs]),
+)
+@settings(max_examples=200, deadline=None)
+def test_vcpu_cost_vector_invariants(exec_s, slo_s, alloc_v, used_frac, n, fn):
+    obs = _obs(exec_s, slo_s, alloc_v, max(used_frac * alloc_v, 0.01))
+    costs = fn(obs, n)
+    assert costs.shape == (n,)
+    assert np.min(costs) == 1.0  # lowest cost is exactly one
+    t = int(np.argmin(costs))
+    # costs grow linearly and monotonically away from the target
+    assert np.all(np.diff(costs[t:]) >= 0)
+    assert np.all(np.diff(costs[: t + 1]) <= 0)
+    # underprediction is penalized more steeply than overprediction
+    if t >= 1 and t + 1 < n:
+        under = costs[t - 1] - costs[t]
+        over = costs[t + 1] - costs[t]
+        assert under >= over
+
+
+def test_absolute_met_slo_descends_to_used():
+    # allocated 16, used 2, met SLO comfortably -> target near 2 or below
+    costs = absolute_vcpu_costs(_obs(1.0, 10.0, 16, 2.0), 32)
+    assert int(np.argmin(costs)) <= 1  # index 1 == 2 vCPUs
+
+
+def test_absolute_violation_low_util_targets_used():
+    # violation but only 40% utilized: external causes — do NOT inflate
+    costs = absolute_vcpu_costs(_obs(5.0, 2.0, 10, 4.0), 32)
+    assert int(np.argmin(costs)) == 3  # 4 vCPUs
+
+
+def test_absolute_violation_high_util_increases():
+    costs = absolute_vcpu_costs(_obs(5.0, 2.0, 8, 8.0), 32)
+    assert int(np.argmin(costs)) > 7
+
+
+@given(
+    used_m=st.floats(10.0, 6000.0),
+    n=st.sampled_from([40, 64]),
+)
+@settings(max_examples=100, deadline=None)
+def test_memory_cost_targets_observed_use(used_m, n):
+    costs = memory_costs(_obs(1.0, 2.0, 4, 2.0, alloc_m=8192, used_m=used_m), n)
+    t = int(np.argmin(costs))
+    target_mb = (t + 1) * 128
+    assert target_mb >= min(used_m, n * 128) - 1e-6
+    assert target_mb - 128 < used_m or t == 0
+
+
+def test_memory_cost_oom_pushes_above_allocation():
+    costs = memory_costs(_obs(1.0, 2.0, 4, 2.0, alloc_m=1024, oom=True), 40)
+    assert (int(np.argmin(costs)) + 1) * 128 > 1024
+
+
+# ----------------------------------------------------------------- CSOAA
+def test_csoaa_learns_feature_dependent_target():
+    rng = np.random.default_rng(0)
+    model = OnlineCSC(n_classes=16, dim=1)
+    for _ in range(300):
+        z = float(rng.choice([-1.0, 1.0]))
+        target = 2 if z < 0 else 12
+        costs = 1.0 + np.abs(np.arange(16) - target) * np.where(
+            np.arange(16) < target, 3.0, 1.0
+        )
+        model.update(np.array([z], np.float32), costs.astype(np.float32))
+    assert abs(model.predict(np.array([-1.0], np.float32)) - 2) <= 1
+    assert abs(model.predict(np.array([1.0], np.float32)) - 12) <= 1
+
+
+# ------------------------------------------------------------- allocator
+def test_confidence_thresholds_gate_predictions():
+    alloc = ResourceAllocator(vcpu_confidence=3, mem_confidence=6)
+    x = np.array([0.5, -0.5], np.float32)
+    a = alloc.allocate("f", x)
+    assert not a.predicted and a.vcpus == alloc.default_vcpus
+    obs = _obs(1.0, 2.0, 10, 2.0, used_m=500.0)
+    for i in range(3):
+        alloc.feedback("f", x, obs)
+    a = alloc.allocate("f", x)
+    assert a.predicted  # vCPU agent past threshold
+    # memory still at default until 6 observations (2x rule)
+    assert a.mem_mb == alloc.default_mem_class * 128
+    for _ in range(3):
+        alloc.feedback("f", x, obs)
+    a2 = alloc.allocate("f", x)
+    assert a2.mem_mb != alloc.default_mem_class * 128 or a2.mem_mb == 512
+
+
+def test_memory_floor_safeguard():
+    alloc = ResourceAllocator(vcpu_confidence=0, mem_confidence=1)
+    x = np.array([0.0], np.float32)
+    alloc.feedback("f", x, _obs(1.0, 2.0, 4, 1.0, used_m=100.0))
+    # predicted ~128-256MB, but the input object is 1 GB -> default max
+    a = alloc.allocate("f", x, input_size_mb=1000.0)
+    assert a.mem_mb == alloc.default_mem_class * 128

@@ -1,0 +1,74 @@
+"""Integration: prefill + one decode step must equal the full-sequence
+forward at the next position, for every architecture family.
+
+MoE capacity dropping is token-competition-dependent (GShard semantics),
+so MoE runs drop-free (high capacity factor) for exactness.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.moe as MOE
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models.model import (
+    forward_decode,
+    forward_prefill,
+    forward_seq,
+    init_params,
+)
+
+
+@pytest.fixture(autouse=True)
+def _dropfree_moe(monkeypatch):
+    monkeypatch.setattr(MOE, "CAPACITY_FACTOR", 16.0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_reduced_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, S = 2, 17
+    if cfg.family in ("ssm", "hybrid"):
+        S = cfg.ssm_chunk
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patch_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+    if cfg.is_encoder_decoder:
+        kwargs["frame_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+
+    off = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    _, cache = forward_prefill(
+        params, cfg, tokens[:, :S], cache_window=S + off + 4, **kwargs
+    )
+    logits_dec, _ = forward_decode(params, cfg, tokens[:, S], cache)
+
+    if cfg.family in ("ssm", "hybrid"):
+        pad = (-(S + 1)) % cfg.ssm_chunk
+        toks_full = jnp.pad(tokens, ((0, 0), (0, pad)))
+    else:
+        toks_full = tokens
+    logits_full, _, _ = forward_seq(params, cfg, toks_full, **kwargs)
+    ref = logits_full[:, off + S].astype(jnp.float32)
+    got = logits_dec.astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    err = float(jnp.max(jnp.abs(ref - got))) / scale
+    assert err < 0.02, (arch, err)
+
+
+def test_decode_is_deterministic():
+    cfg = get_reduced_config("qwen2_5_3b")
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    _, cache = forward_prefill(params, cfg, tokens, cache_window=24)
+    nxt = jnp.zeros((2,), jnp.int32)
+    l1, c1 = forward_decode(params, cfg, nxt, cache)
+    l2, c2 = forward_decode(params, cfg, nxt, cache)
+    assert jnp.array_equal(l1, l2)
+    for k in cache:
+        assert jnp.array_equal(c1[k], c2[k]), k

@@ -1,0 +1,54 @@
+"""Featurizer tests: Table 2 schemas, background path, standardization."""
+
+import numpy as np
+import pytest
+
+from repro.core.featurizer import FEATURE_SCHEMAS, Featurizer
+
+
+def test_schemas_match_table2():
+    assert FEATURE_SCHEMAS["image"] == [
+        "width", "height", "channels", "dpi_x", "dpi_y", "file_size"]
+    assert FEATURE_SCHEMAS["matrix"] == ["rows", "cols", "density"]
+    assert set(FEATURE_SCHEMAS["video"]) >= {
+        "width", "height", "duration", "bitrate", "fps", "encoding"}
+    assert set(FEATURE_SCHEMAS["audio"]) >= {
+        "channels", "sample_rate", "duration", "bitrate", "is_flac"}
+
+
+def test_unknown_type_falls_back_to_payload():
+    f = Featurizer()
+    x = f.raw_features("mystery", {"payload": 42.0})
+    assert x.shape == (1,)
+
+
+def test_background_persist_then_lookup():
+    f = Featurizer()
+    f.persist_object("obj1", "image",
+                     {"width": 100, "height": 50, "channels": 3,
+                      "dpi_x": 72, "dpi_y": 72, "file_size": 5000})
+    assert f.has_object("obj1")
+    x = f.extract("fn", "image", {}, object_id="obj1")
+    assert x.shape == (6,)
+
+
+def test_standardization_converges():
+    f = Featurizer()
+    rng = np.random.default_rng(0)
+    xs = []
+    for _ in range(200):
+        size = float(rng.uniform(1e3, 1e7))
+        xs.append(f.extract("fn", "file", {"file_size": size}))
+    tail = np.array(xs[50:])
+    # standardized features are zero-mean-ish, unit-scale-ish
+    assert abs(tail.mean()) < 0.5
+    assert 0.3 < tail.std() < 3.0
+
+
+def test_encoding_enum():
+    f = Featurizer()
+    a = f.raw_features("video", {"width": 1, "height": 1, "duration": 1,
+                                 "bitrate": 1, "fps": 1, "encoding": "mp4"})
+    b = f.raw_features("video", {"width": 1, "height": 1, "duration": 1,
+                                 "bitrate": 1, "fps": 1, "encoding": "av1"})
+    assert a[-1] != b[-1]

@@ -1,0 +1,70 @@
+"""Unit tests for the HLO collective parser and roofline math."""
+
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_parse_simple_all_reduce():
+    hlo = """
+  %all-reduce.1 = f32[256,1024]{1,0} all-reduce(%add.5), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%sum
+"""
+    st = ha.collective_stats(hlo, default_group=16)
+    assert st.op_counts == {"all-reduce": 1}
+    expected = 2 * 256 * 1024 * 4 * 3 / 4  # 2*T*(n-1)/n, n=4
+    assert st.per_device_traffic_bytes == pytest.approx(expected)
+
+
+def test_parse_iota_replica_groups():
+    hlo = "%ag = bf16[16,512]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}\n"
+    st = ha.collective_stats(hlo, default_group=99)
+    n = 16
+    expected = 16 * 512 * 2 * (n - 1) / n
+    assert st.per_device_traffic_bytes == pytest.approx(expected)
+
+
+def test_start_done_counted_once():
+    hlo = """
+  %ar-start = f32[8,8]{1,0} all-reduce-start(%x), replica_groups={{0,1}}
+  %ar-done = f32[8,8]{1,0} all-reduce-done(%ar-start)
+"""
+    st = ha.collective_stats(hlo, default_group=2)
+    assert st.op_counts.get("all-reduce", 0) == 1
+
+
+def test_reduce_scatter_factor():
+    hlo = "%rs = f32[64]{0} reduce-scatter(%x), replica_groups={{0,1,2,3}}, dimensions={0}\n"
+    st = ha.collective_stats(hlo, default_group=4)
+    assert st.per_device_traffic_bytes == pytest.approx(64 * 4 * 3)  # R*(n-1)
+
+
+def test_collective_permute():
+    hlo = "%cp = bf16[32,32]{1,0} collective-permute(%x), source_target_pairs={{0,1}}\n"
+    st = ha.collective_stats(hlo, default_group=2)
+    assert st.per_device_traffic_bytes == pytest.approx(32 * 32 * 2)
+
+
+def test_roofline_terms_and_dominant():
+    rf = ha.roofline_terms(
+        per_device_flops=197e12,        # exactly 1s of compute
+        per_device_bytes=819e9 * 2,     # 2s of memory
+        per_device_collective_bytes=50e9 * 0.5,  # 0.5s
+        chips=256, model_flops=197e12 * 256 * 0.5,
+        peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+    )
+    assert rf.compute_s == pytest.approx(1.0)
+    assert rf.memory_s == pytest.approx(2.0)
+    assert rf.collective_s == pytest.approx(0.5)
+    assert rf.dominant == "memory"
+    assert rf.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_estimate_kinds():
+    from repro.configs import get_config, SHAPES
+
+    cfg = get_config("qwen2_5_3b")
+    n = cfg.active_param_count()
+    t = ha.model_flops_estimate(cfg, SHAPES["train_4k"])
+    assert t == pytest.approx(6.0 * n * 256 * 4096)
+    d = ha.model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert d == pytest.approx(2.0 * n * 128)

@@ -1,0 +1,62 @@
+"""Property tests for the ring-buffer KV cache (hypothesis)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.kv_cache import (
+    ring_positions,
+    ring_valid,
+    ring_write,
+    write_prefill,
+)
+
+
+@given(
+    W=st.integers(2, 64),
+    pos=st.integers(0, 300),
+)
+@settings(max_examples=80, deadline=None)
+def test_ring_positions_properties(W, pos):
+    p = jnp.array([pos], jnp.int32)
+    rp = np.array(ring_positions(p, W))[0]
+    rv = np.array(ring_valid(p, W))[0]
+    for slot in range(W):
+        ap = rp[slot]
+        if rv[slot]:
+            # the most recent write to this slot: largest x < pos, x%W==slot
+            assert ap % W == slot
+            assert 0 <= ap < pos
+            assert ap + W >= pos  # nothing newer fits in the same slot
+        else:
+            assert ap < 0  # never written
+
+
+@given(
+    W=st.integers(2, 16),
+    n_writes=st.integers(1, 40),
+)
+@settings(max_examples=40, deadline=None)
+def test_ring_write_matches_simulation(W, n_writes):
+    B, D = 2, 3
+    buf = jnp.zeros((B, W, D))
+    expect = np.zeros((B, W, D))
+    for t in range(n_writes):
+        val = np.full((B, D), float(t + 1))
+        buf = ring_write(buf, jnp.asarray(val), jnp.full((B,), t, jnp.int32))
+        expect[:, t % W] = val
+    assert np.allclose(np.array(buf), expect)
+
+
+@given(S=st.integers(1, 48), W=st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_write_prefill_equals_sequential_writes(S, W):
+    B, D = 1, 2
+    new = jnp.arange(S, dtype=jnp.float32)[None, :, None] + 1.0
+    new = jnp.broadcast_to(new, (B, S, D))
+    bulk = write_prefill(jnp.zeros((B, W, D)), new)
+    seq = jnp.zeros((B, W, D))
+    for t in range(S):
+        seq = ring_write(seq, new[:, t], jnp.full((B,), t, jnp.int32))
+    assert np.allclose(np.array(bulk), np.array(seq))

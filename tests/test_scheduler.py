@@ -1,0 +1,90 @@
+"""Scheduler unit tests: the §5 routing priority and placement rules."""
+
+import pytest
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.scheduler import ShabariScheduler
+
+
+def _mk(n_workers=4):
+    cluster = Cluster(n_workers=n_workers, vcpus_per_worker=16,
+                      mem_mb_per_worker=8192, vcpu_limit=16)
+    return cluster, ShabariScheduler(cluster)
+
+
+def test_exact_warm_container_preferred():
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    exact = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    bigger = cluster.new_container(w, "f", 8, 1024, now=0.0, warm_at=0.0)
+    d = sched.schedule("f", Allocation(4, 512, True), now=1.0)
+    assert d.container is exact and not d.cold_start
+
+
+def test_larger_warm_used_with_background_launch():
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    big = cluster.new_container(w, "f", 8, 1024, now=0.0, warm_at=0.0)
+    d = sched.schedule("f", Allocation(4, 512, True), now=1.0)
+    assert d.container is big and not d.cold_start
+    assert d.background_launch is not None
+    _, v, m = d.background_launch
+    assert (v, m) == (4, 512)  # exact size spawned for the future
+
+
+def test_cold_start_on_home_server_then_spill():
+    cluster, sched = _mk()
+    home = sched._home_worker("f")
+    d = sched.schedule("f", Allocation(4, 512, True), now=0.0)
+    assert d.cold_start and d.background_launch[0].wid == home
+    # fill the home server -> next worker in ring order
+    cluster.workers[home].acquire(16, 0)
+    d2 = sched.schedule("f", Allocation(4, 512, True), now=0.0)
+    assert d2.background_launch[0].wid == (home + 1) % 4
+
+
+def test_busy_and_cold_containers_not_reused():
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    busy = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    busy.busy = True
+    still_cold = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=99.0)
+    d = sched.schedule("f", Allocation(4, 512, True), now=1.0)
+    assert d.cold_start  # neither container usable
+
+
+def test_no_capacity_anywhere_queues():
+    cluster, sched = _mk(n_workers=2)
+    for w in cluster.workers:
+        w.acquire(16, 0)
+    d = sched.schedule("f", Allocation(4, 512, True), now=0.0)
+    assert d.queued
+
+
+def test_openwhisk_mode_skips_larger_and_background():
+    cluster = Cluster(n_workers=2, vcpus_per_worker=16,
+                      mem_mb_per_worker=8192)
+    sched = ShabariScheduler(cluster, route_larger=False,
+                             background_launch=False)
+    w = cluster.workers[0]
+    cluster.new_container(w, "f", 8, 1024, now=0.0, warm_at=0.0)
+    d = sched.schedule("f", Allocation(4, 512, True), now=1.0)
+    assert d.cold_start  # larger warm container NOT used
+
+
+def test_keep_alive_reaps_idle_containers():
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    c = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    c.last_used = 0.0
+    assert sched.reap_idle(now=601.0) == 1
+    assert not w.containers
+
+
+def test_packing_placement_fills_loaded_worker_first():
+    cluster = Cluster(n_workers=3, vcpus_per_worker=16, mem_mb_per_worker=8192)
+    sched = ShabariScheduler(cluster, placement="packing")
+    cluster.workers[1].acquire(8, 100)
+    d = sched.schedule("f", Allocation(4, 512, True), now=0.0)
+    assert d.background_launch[0].wid == 1  # most-loaded with capacity

@@ -1,0 +1,73 @@
+"""Simulator integration tests: determinism, accounting, and the
+qualitative paper results as regression guards."""
+
+import numpy as np
+import pytest
+
+from repro.serving.experiment import run_experiment
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.workload import generate_trace
+
+
+def test_trace_deterministic_and_sorted():
+    profiles = build_profiles()
+    pool = build_input_pool()
+    kwargs = dict(
+        rps=3.0,
+        functions=sorted(profiles),
+        inputs_per_function={f: len(pool[f]) for f in profiles},
+        duration_s=120.0,
+        seed=7,
+    )
+    t1 = generate_trace(**kwargs)
+    t2 = generate_trace(**kwargs)
+    assert [(a.t, a.function, a.input_idx) for a in t1] == [
+        (a.t, a.function, a.input_idx) for a in t2
+    ]
+    assert all(t1[i].t <= t1[i + 1].t for i in range(len(t1) - 1))
+    assert abs(len(t1) - 3.0 * 120.0) < 1  # RPS honored
+
+
+def test_simulation_deterministic():
+    r1 = run_experiment("shabari", rps=3.0, duration_s=120.0, seed=3)
+    r2 = run_experiment("shabari", rps=3.0, duration_s=120.0, seed=3)
+    assert r1.summary == r2.summary
+
+
+def test_all_arrivals_accounted():
+    r = run_experiment("static-medium", rps=3.0, duration_s=120.0, seed=1,
+                       keep_results=True)
+    assert r.summary["n"] == len(r.results)
+    assert abs(r.summary["n"] - 3.0 * 120.0) < 1
+    for x in r.results:
+        if not x.timed_out:
+            assert x.finish_t >= x.start_t >= x.arrival_t - 1e-9
+            assert x.used_vcpus <= x.alloc_vcpus + 1e-9
+            assert x.used_mem_mb <= x.alloc_mem_mb + 1e-9
+
+
+@pytest.mark.slow
+def test_shabari_beats_input_agnostic_baselines_at_load():
+    """Regression guard for the headline: at RPS 5-6 Shabari has fewer
+    SLO violations than parrotfish/cypress AND wastes less memory than
+    every baseline (paper Fig. 8)."""
+    res = {
+        pol: run_experiment(pol, rps=5.0, duration_s=300.0, seed=0).summary
+        for pol in ("shabari", "parrotfish", "cypress", "aquatope",
+                    "static-large")
+    }
+    s = res["shabari"]
+    assert s["slo_violation_pct"] < res["parrotfish"]["slo_violation_pct"]
+    assert s["slo_violation_pct"] < res["cypress"]["slo_violation_pct"]
+    assert s["wasted_vcpus_p50"] == 0.0
+    for pol in ("parrotfish", "cypress", "aquatope", "static-large"):
+        assert s["wasted_mem_mb_p50"] < res[pol]["wasted_mem_mb_p50"]
+    assert s["oom_pct"] < 1.5
+
+
+@pytest.mark.slow
+def test_scheduler_halves_cold_starts():
+    a = run_experiment("shabari", rps=5.0, duration_s=300.0, seed=0).summary
+    b = run_experiment("shabari-openwhisk-sched", rps=5.0, duration_s=300.0,
+                       seed=0).summary
+    assert a["cold_start_pct"] < 0.75 * b["cold_start_pct"]

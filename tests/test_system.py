@@ -1,0 +1,42 @@
+"""End-to-end behaviour tests for the whole Shabari system."""
+
+import numpy as np
+import pytest
+
+from repro.serving.experiment import run_experiment
+
+
+def test_e2e_shabari_pipeline_runs_and_learns():
+    """One full trace through featurizer -> allocator -> scheduler ->
+    simulator -> daemon feedback; allocations must specialize."""
+    r = run_experiment("shabari", rps=4.0, duration_s=240.0, seed=0,
+                       keep_results=True)
+    assert r.summary["n"] > 500
+    # invocations complete and at least a few functions saw enough
+    # traffic for predictions to kick in (unique container sizes > 1)
+    multi = [fn for fn, n in r.container_sizes.items() if n > 1]
+    assert len(multi) >= 3
+    # wasted vCPUs shrink over time (learning): compare halves
+    res = sorted(r.results, key=lambda x: x.arrival_t)
+    half = len(res) // 2
+    w1 = np.mean([x.wasted_vcpus for x in res[:half]])
+    w2 = np.mean([x.wasted_vcpus for x in res[half:]])
+    assert w2 < w1
+
+
+def test_e2e_formulation_study_specialization():
+    """Figure 6 signature: the one-hot single-model formulation cannot
+    specialize per function (its allocations pin to a narrow band, 9-13
+    vCPUs in the paper) while per-function agents spread out."""
+
+    def per_fn_alloc_spread(policy):
+        r = run_experiment(policy, rps=4.0, duration_s=240.0, seed=0,
+                           keep_results=True)
+        means = {}
+        for x in r.results:
+            means.setdefault(x.function, []).append(x.alloc_vcpus)
+        return np.std([np.mean(v) for v in means.values()])
+
+    spread_perfn = per_fn_alloc_spread("shabari")
+    spread_onehot = per_fn_alloc_spread("shabari-one-hot")
+    assert spread_perfn > spread_onehot
