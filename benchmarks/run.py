@@ -23,6 +23,8 @@ MODULES = [
     ("fig11_13", "benchmarks.fig11_13_sensitivity"),
     ("fig14", "benchmarks.fig14_overheads"),
     ("table3", "benchmarks.table3_container_sizes"),
+    ("scenario_matrix", "benchmarks.scenario_matrix"),
+    ("sim_bench", "benchmarks.sim_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]

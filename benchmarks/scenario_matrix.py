@@ -1,0 +1,55 @@
+"""Every policy x every scenario — the evaluation grid.
+
+The paper's Figure 8 compares policies at one load shape (the Azure
+trace). Allocation quality flips under bursty versus steady load
+(Fifer, arXiv 2008.12819), so this matrix runs each policy against all
+registered scenarios: azure, poisson-steady, flash-crowd, diurnal,
+heavy-tail-inputs, cold-storm, oversubscribe.
+
+Rows: ``scenario_matrix.<scenario>.<policy>,<wall_us>,<metrics>``.
+Set BENCH_QUICK=1 for a reduced grid (3 policies, shorter traces).
+
+  PYTHONPATH=src python -m benchmarks.scenario_matrix
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import QUICK, duration_s, emit
+from repro.serving.experiment import POLICIES, run_scenario
+from repro.serving.workload import ScenarioSpec, list_scenarios
+
+QUICK_POLICIES = ("shabari", "parrotfish", "static-medium")
+
+RPS = 4.0
+
+
+def run() -> None:
+    policies = QUICK_POLICIES if QUICK else POLICIES
+    for scenario in list_scenarios():
+        spec = ScenarioSpec(
+            scenario=scenario, rps=RPS, duration_s=duration_s(), seed=0,
+        )
+        for pol in policies:
+            t0 = time.perf_counter()
+            r = run_scenario(pol, spec)
+            wall = time.perf_counter() - t0
+            s = r.summary
+            emit(
+                f"scenario_matrix.{scenario}.{pol}",
+                wall * 1e6,
+                "|".join([
+                    f"n={s['n']:.0f}",
+                    f"slo_viol_pct={s['slo_violation_pct']:.2f}",
+                    f"cold_pct={s['cold_start_pct']:.2f}",
+                    f"wasted_mem_p50={s['wasted_mem_mb_p50']:.0f}",
+                    f"timeout_pct={s['timeout_pct']:.2f}",
+                    f"oom_pct={s['oom_pct']:.2f}",
+                ]),
+            )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

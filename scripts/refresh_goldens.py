@@ -1,0 +1,44 @@
+"""Regenerate the golden-metrics snapshots in tests/goldens/.
+
+Run this ONLY when a PR intentionally changes simulated behavior
+(allocator, scheduler, workload, simulator); commit the diff so the
+review shows exactly which metrics moved and by how much.
+
+    PYTHONPATH=src python scripts/refresh_goldens.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.golden import GOLDEN_POLICY, golden_specs, run_golden  # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens")
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for scenario, spec in sorted(golden_specs().items()):
+        summary = run_golden(scenario)
+        path = os.path.join(GOLDEN_DIR, f"{scenario}.json")
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "policy": GOLDEN_POLICY,
+                    "spec": dataclasses.asdict(spec),
+                    "summary": summary,
+                },
+                f, indent=2, sort_keys=True,
+            )
+            f.write("\n")
+        print(f"{scenario:>20}: n={summary['n']:.0f} "
+              f"slo_viol={summary['slo_violation_pct']:.2f}% -> {path}")
+
+
+if __name__ == "__main__":
+    main()

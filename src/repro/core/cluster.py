@@ -45,7 +45,19 @@ class Worker:
     vcpu_limit: int = 90
     used_vcpus: int = 0
     used_mem_mb: int = 0
+    # Incremental aggregates over RUNNING invocations (parallel demand
+    # and object-store NIC draw) so contention lookups are O(1) instead
+    # of a scan over every running invocation per event.
+    active_demand_vcpus: float = 0.0
+    active_net_gbps: float = 0.0
     containers: Dict[int, Container] = dataclasses.field(default_factory=dict)
+    # per-function view of ``containers`` so warm lookups touch only the
+    # function's own containers instead of scanning every container on
+    # the worker (insertion order matches ``containers``, so results are
+    # identical to the full scan)
+    by_function: Dict[str, Dict[int, Container]] = dataclasses.field(
+        default_factory=dict
+    )
 
     def fits(self, vcpus: int, mem_mb: int) -> bool:
         return (
@@ -62,12 +74,25 @@ class Worker:
         self.used_mem_mb -= mem_mb
         assert self.used_vcpus >= 0 and self.used_mem_mb >= 0
 
+    def add_active(self, demand_vcpus: float, net_gbps: float) -> None:
+        self.active_demand_vcpus += demand_vcpus
+        self.active_net_gbps += net_gbps
+
+    def remove_active(self, demand_vcpus: float, net_gbps: float) -> None:
+        self.active_demand_vcpus -= demand_vcpus
+        self.active_net_gbps -= net_gbps
+        assert self.active_demand_vcpus > -1e-6 and self.active_net_gbps > -1e-6
+        # clamp float drift from repeated +=/-= so long runs stay exact
+        if self.active_demand_vcpus < 1e-9:
+            self.active_demand_vcpus = 0.0
+        if self.active_net_gbps < 1e-9:
+            self.active_net_gbps = 0.0
+
     def idle_warm(self, function: str, now: float) -> List[Container]:
-        return [
-            c
-            for c in self.containers.values()
-            if c.function == function and not c.busy and c.warm_at <= now
-        ]
+        byf = self.by_function.get(function)
+        if not byf:
+            return []
+        return [c for c in byf.values() if not c.busy and c.warm_at <= now]
 
 
 class Cluster:
@@ -77,7 +102,12 @@ class Cluster:
         vcpus_per_worker: int = 90,
         mem_mb_per_worker: int = 125 * 1024,
         vcpu_limit: Optional[int] = None,
+        legacy_scans: bool = False,
     ):
+        # legacy_scans restores the pre-refactor O(containers) warm
+        # lookup (see Simulator's SimConfig.legacy_scans) for A/B
+        # benchmarking; results are identical either way.
+        self.legacy_scans = legacy_scans
         self.workers = [
             Worker(
                 wid=i,
@@ -103,13 +133,25 @@ class Cluster:
             warm_at=warm_at,
         )
         worker.containers[c.cid] = c
+        worker.by_function.setdefault(function, {})[c.cid] = c
         return c
 
     def remove_container(self, c: Container) -> None:
         c.worker.containers.pop(c.cid, None)
+        byf = c.worker.by_function.get(c.function)
+        if byf is not None:
+            byf.pop(c.cid, None)
 
     def idle_warm(self, function: str, now: float) -> List[Container]:
         out: List[Container] = []
+        if self.legacy_scans:
+            for w in self.workers:
+                out.extend(
+                    c for c in w.containers.values()
+                    if c.function == function and not c.busy
+                    and c.warm_at <= now
+                )
+            return out
         for w in self.workers:
             out.extend(w.idle_warm(function, now))
         return out

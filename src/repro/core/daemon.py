@@ -78,17 +78,37 @@ class WorkerDaemon:
         return obs
 
 
+# deterministic per-length envelopes, cached: a simulation synthesizes
+# one trace per completion, and recomputing linspace + the ramp shapes
+# dominated the per-finish cost. Values are identical to the uncached
+# computation; only the rng jitter differs per call.
+_ENVELOPE_CACHE: dict = {}
+_ENVELOPE_CACHE_MAX = 512  # FIFO-evicted; ~16 MB worst case
+
+
+def _envelopes(n: int):
+    env = _ENVELOPE_CACHE.get(n)
+    if env is None:
+        if len(_ENVELOPE_CACHE) >= _ENVELOPE_CACHE_MAX:
+            _ENVELOPE_CACHE.pop(next(iter(_ENVELOPE_CACHE)))
+        t = np.linspace(0.0, 1.0, n)
+        cpu = np.minimum(1.0, np.minimum(t / 0.1 + 1e-3, (1 - t) / 0.1 + 1e-3))
+        mem = np.minimum(1.0, t / 0.3 + 0.2)
+        env = (cpu, mem)
+        _ENVELOPE_CACHE[n] = env
+    return env
+
+
 def synth_trace(max_vcpus: float, max_mem_mb: float, exec_time_s: float,
                 rng: np.random.Generator) -> UtilizationTrace:
     """Build a plausible 10 ms-sampled utilization series whose maxima are
     the given values (ramp-up, plateau with jitter, ramp-down)."""
     n = max(int(exec_time_s / SAMPLE_INTERVAL_S), 4)
     n = min(n, 4096)  # cap the series length for very long invocations
-    t = np.linspace(0.0, 1.0, n)
-    envelope = np.minimum(1.0, np.minimum(t / 0.1 + 1e-3, (1 - t) / 0.1 + 1e-3))
+    envelope, mem_envelope = _envelopes(n)
     jitter = 1.0 - 0.05 * rng.random(n)
     v = max_vcpus * envelope * jitter
-    m = max_mem_mb * np.minimum(1.0, t / 0.3 + 0.2) * (1 - 0.02 * rng.random(n))
+    m = max_mem_mb * mem_envelope * (1 - 0.02 * rng.random(n))
     # force exact maxima
     if n:
         v[np.argmax(v)] = max_vcpus

@@ -18,7 +18,7 @@ from repro.serving.simulator import (
     Simulator,
     summarize,
 )
-from repro.serving.workload import generate_trace
+from repro.serving.workload import ScenarioSpec, generate_scenario, generate_trace
 
 POLICIES = (
     "static-medium",
@@ -78,6 +78,48 @@ class ExperimentResult:
     container_sizes: Dict[str, int]
 
 
+def _run_policy_on_trace(
+    policy_name: str,
+    trace,
+    profiles,
+    pool,
+    slo_table,
+    *,
+    seed: int,
+    rps: float,
+    sim_cfg: Optional[SimConfig],
+    vcpu_confidence: Optional[int] = None,
+    mem_confidence: Optional[int] = None,
+    keep_results: bool = False,
+) -> ExperimentResult:
+    """Shared tail of run_experiment/run_scenario: policy -> simulator
+    -> summary."""
+    policy = make_policy(policy_name, profiles, pool, slo_table, seed=seed)
+    if vcpu_confidence is not None and hasattr(policy, "allocator"):
+        policy.allocator.vcpu_confidence = vcpu_confidence
+    if mem_confidence is not None and hasattr(policy, "allocator"):
+        policy.allocator.mem_confidence = mem_confidence
+
+    # Baselines that keep OpenWhisk's memory-centric load accounting get a
+    # per-worker vCPU limit of +inf (vCPUs oversubscribe, §5 reason 3).
+    cfg = sim_cfg or SimConfig(seed=seed)
+    if not policy.uses_shabari_scheduler:
+        cfg = dataclasses.replace(cfg, vcpu_limit=10_000)
+
+    sim = Simulator(
+        policy=policy, profiles=profiles, input_pool=pool,
+        slo_table=slo_table, cfg=cfg,
+    )
+    results = sim.run(trace)
+    summary = summarize(results)
+    sizes = {fn: len(s) for fn, s in sim.container_sizes.items()}
+    return ExperimentResult(
+        policy=policy_name, rps=rps, summary=summary,
+        results=results if keep_results else [],
+        container_sizes=sizes,
+    )
+
+
 def run_experiment(
     policy_name: str,
     *,
@@ -93,18 +135,6 @@ def run_experiment(
     profiles = build_profiles()
     pool = build_input_pool(seed=0)  # input pool fixed across policies
     slo_table = B.build_slo_table(profiles, pool, multiplier=slo_multiplier)
-    policy = make_policy(policy_name, profiles, pool, slo_table, seed=seed)
-    if vcpu_confidence is not None and hasattr(policy, "allocator"):
-        policy.allocator.vcpu_confidence = vcpu_confidence
-    if mem_confidence is not None and hasattr(policy, "allocator"):
-        policy.allocator.mem_confidence = mem_confidence
-
-    # Baselines that keep OpenWhisk's memory-centric load accounting get a
-    # per-worker vCPU limit of +inf (vCPUs oversubscribe, §5 reason 3).
-    cfg = sim_cfg or SimConfig(seed=seed)
-    if not policy.uses_shabari_scheduler:
-        cfg = dataclasses.replace(cfg, vcpu_limit=10_000)
-
     trace = generate_trace(
         rps=rps,
         functions=sorted(profiles.keys()),
@@ -112,15 +142,81 @@ def run_experiment(
         duration_s=duration_s,
         seed=seed,
     )
-    sim = Simulator(
-        policy=policy, profiles=profiles, input_pool=pool,
-        slo_table=slo_table, cfg=cfg,
+    return _run_policy_on_trace(
+        policy_name, trace, profiles, pool, slo_table,
+        seed=seed, rps=rps, sim_cfg=sim_cfg,
+        vcpu_confidence=vcpu_confidence, mem_confidence=mem_confidence,
+        keep_results=keep_results,
     )
-    results = sim.run(trace)
-    summary = summarize(results)
-    sizes = {fn: len(s) for fn, s in sim.container_sizes.items()}
-    return ExperimentResult(
-        policy=policy_name, rps=rps, summary=summary,
-        results=results if keep_results else [],
-        container_sizes=sizes,
+
+
+# ---------------------------------------------------------------------------
+# Scenario-matrix entry point
+# ---------------------------------------------------------------------------
+
+
+def expand_function_clones(
+    profiles: Dict,
+    pool: Dict,
+    slo_table: Dict,
+    clones: int,
+) -> Tuple[Dict, Dict, Dict]:
+    """Clone each function into ``clones`` independently-named aliases
+    (``fn``, ``fn::1``, ...) sharing its profile, input pool, and SLOs.
+
+    Aliases behave like distinct functions everywhere identity matters —
+    warm-container reuse, home-worker hashing, per-function allocator
+    agents — which is how cold-storm gets "many unique rare functions"
+    out of the paper's 12 profiled behaviors."""
+    if clones <= 1:
+        return profiles, pool, slo_table
+    P: Dict = {}
+    L: Dict = {}
+    S: Dict = {}
+    for fn in profiles:
+        for k in range(clones):
+            alias = fn if k == 0 else f"{fn}::{k}"
+            P[alias] = profiles[fn]
+            L[alias] = pool[fn]
+            for idx in range(len(pool[fn])):
+                S[(alias, idx)] = slo_table[(fn, idx)]
+    return P, L, S
+
+
+def run_scenario(
+    policy_name: str,
+    spec: ScenarioSpec,
+    *,
+    slo_multiplier: float = 1.4,
+    sim_cfg: Optional[SimConfig] = None,
+    vcpu_confidence: Optional[int] = None,
+    mem_confidence: Optional[int] = None,
+    keep_results: bool = False,
+) -> ExperimentResult:
+    """Run one (policy, scenario) cell of the evaluation matrix.
+
+    Like :func:`run_experiment` but the trace comes from the scenario
+    registry, and cold-storm's ``clones`` param expands the function
+    set before policies are built (so offline profilers profile every
+    alias, exactly as they would real distinct functions)."""
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)  # input pool fixed across policies
+    slo_table = B.build_slo_table(profiles, pool, multiplier=slo_multiplier)
+
+    default_clones = 6 if spec.scenario == "cold-storm" else 1
+    clones = int(spec.param("clones", default_clones))
+    profiles, pool, slo_table = expand_function_clones(
+        profiles, pool, slo_table, clones
+    )
+
+    trace = generate_scenario(
+        spec,
+        functions=sorted(profiles.keys()),
+        inputs_per_function={f: len(pool[f]) for f in profiles},
+    )
+    return _run_policy_on_trace(
+        policy_name, trace, profiles, pool, slo_table,
+        seed=spec.seed, rps=spec.rps, sim_cfg=sim_cfg,
+        vcpu_confidence=vcpu_confidence, mem_confidence=mem_confidence,
+        keep_results=keep_results,
     )

@@ -72,6 +72,16 @@ def _mb(x: float) -> float:
     return x / 1e6
 
 
+def base_function(fn: str) -> str:
+    """Strip a clone suffix (``matmult::3`` -> ``matmult``).
+
+    Scenario generators (cold-storm) clone the 12 paper functions into
+    many independently-named aliases; everything keyed on the function's
+    BEHAVIOR (profile shape, network-fed set, input-size model) must
+    look through the alias."""
+    return fn.split("::", 1)[0]
+
+
 # ---------------------------------------------------------------------------
 # The 12 functions
 # ---------------------------------------------------------------------------
@@ -306,6 +316,7 @@ def build_input_pool(seed: int = 0) -> Dict[str, List[Dict]]:
 
 
 def input_size_mb(fn: str, meta: Dict) -> float:
+    fn = base_function(fn)
     fs = meta.get("file_size")
     if fs is not None:
         return fs / 1e6

@@ -32,7 +32,7 @@ from repro.core.cluster import Cluster, Container, Worker
 from repro.core.cost_functions import Observation
 from repro.core.daemon import UtilizationTrace, WorkerDaemon, synth_trace
 from repro.core.metadata_store import MetadataStore
-from repro.serving.profiles import FunctionProfile, input_size_mb
+from repro.serving.profiles import FunctionProfile, base_function, input_size_mb
 from repro.serving.workload import Arrival
 
 # functions that pull inputs over the network from the object store (§5)
@@ -55,6 +55,24 @@ class SimConfig:
     queue_timeout_s: float = 300.0
     keep_alive_s: float = 600.0
     seed: int = 0
+    # How co-runner contention is applied to an invocation:
+    #   "snapshot" (default) — the slowdown is computed ONCE at start
+    #     time from the co-runners active at that instant and held for
+    #     the invocation's whole run. This is the original semantics;
+    #     with it, metrics match the pre-refactor per-event scan.
+    #   "dynamic" — the slowdown is re-evaluated whenever a co-runner
+    #     starts or finishes on the same worker: remaining work is
+    #     rescaled and the finish event re-queued. Closer to real
+    #     cgroup CPU-share behavior; metrics differ from snapshot.
+    contention_mode: str = "snapshot"
+    # Compatibility switch for A/B benchmarking (benchmarks/sim_bench):
+    # restore the pre-refactor O(N) loops — the per-event scan over
+    # every running invocation for contention demand, and the
+    # per-schedule scan over every container for warm lookups — instead
+    # of the incremental per-worker aggregates and per-function index.
+    # Metrics are identical either way; only speed differs. Only
+    # meaningful with contention_mode="snapshot".
+    legacy_scans: bool = False
 
 
 @dataclasses.dataclass
@@ -112,6 +130,15 @@ class _Running:
     worker: Worker
     demand_vcpus: float
     net_gbps: float
+    arrival: Optional[Arrival] = None
+    meta: Optional[Dict] = None
+    # dynamic-contention bookkeeping: seconds of uncontended work left,
+    # the slowdown currently applied, when it was last re-evaluated, and
+    # a generation counter that invalidates superseded finish events.
+    base_remaining: float = 0.0
+    slow: float = 1.0
+    last_t: float = 0.0
+    gen: int = 0
 
 
 class Simulator:
@@ -135,6 +162,7 @@ class Simulator:
             vcpus_per_worker=self.cfg.vcpus_per_worker,
             mem_mb_per_worker=self.cfg.mem_mb_per_worker,
             vcpu_limit=self.cfg.vcpu_limit,
+            legacy_scans=self.cfg.legacy_scans,
         )
         from repro.core.scheduler import ShabariScheduler
 
@@ -152,6 +180,14 @@ class Simulator:
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
         self._running: Dict[int, _Running] = {}
+        # per-worker index of running invocations (dynamic-mode retiming
+        # touches only the affected worker's co-runners)
+        self._worker_running: List[Dict[int, _Running]] = [
+            {} for _ in self.cluster.workers
+        ]
+        self.dynamic = self.cfg.contention_mode == "dynamic"
+        assert self.cfg.contention_mode in ("snapshot", "dynamic")
+        self.events_processed = 0
         self.now = 0.0
 
     # ------------------------------------------------------------ events
@@ -165,18 +201,24 @@ class Simulator:
 
     def _contention(self, w: Worker, fn: str, extra_demand: float,
                     extra_net: float) -> float:
-        demand = extra_demand + sum(
-            r.demand_vcpus for r in self._running.values() if r.worker is w
-        )
+        if self.cfg.legacy_scans:
+            # pre-refactor loop, kept for A/B benchmarking (sim_bench)
+            demand = extra_demand + sum(
+                r.demand_vcpus for r in self._running.values() if r.worker is w
+            )
+            net = extra_net + sum(
+                r.net_gbps for r in self._running.values() if r.worker is w
+            )
+        else:
+            demand = extra_demand + w.active_demand_vcpus
+            net = extra_net + w.active_net_gbps
         cpu_slow = max(1.0, demand / self.cfg.physical_cores)
-        net = extra_net + sum(
-            r.net_gbps for r in self._running.values() if r.worker is w
-        )
-        net_slow = max(1.0, net / NIC_GBPS) if fn in NETWORK_FED else 1.0
+        net_slow = (max(1.0, net / NIC_GBPS)
+                    if base_function(fn) in NETWORK_FED else 1.0)
         return max(cpu_slow, net_slow)
 
     def _net_demand(self, fn: str, meta: Dict, exec_s: float) -> float:
-        if fn not in NETWORK_FED or exec_s <= 0:
+        if base_function(fn) not in NETWORK_FED or exec_s <= 0:
             return 0.0
         bits = input_size_mb(fn, meta) * 8e6
         return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
@@ -263,17 +305,54 @@ class Simulator:
             queued_s=now - first_seen - (cold_latency if cold else 0.0),
             oom_killed=oom, exec_s=exec_s,
         )
-        self._running[arrival.invocation_id] = _Running(
+        run = _Running(
             result=res, container=container, worker=w,
-            demand_vcpus=demand, net_gbps=net,
+            demand_vcpus=demand, net_gbps=net, arrival=arrival, meta=meta,
         )
-        self._push(now + exec_s, "finish", (arrival, meta))
+        self._running[arrival.invocation_id] = run
+        self._worker_running[w.wid][arrival.invocation_id] = run
+        w.add_active(demand, net)
+        if self.dynamic:
+            # track uncontended work; the finish event floats as
+            # co-runners come and go
+            run.base_remaining = base_exec * (0.6 if oom else 1.0)
+            run.slow = slow
+            run.last_t = now
+            self._push(now + run.base_remaining * slow, "finish",
+                       (arrival, meta, run.gen))
+            self._retime_worker(w, exclude=arrival.invocation_id)
+        else:
+            self._push(now + exec_s, "finish", (arrival, meta, 0))
 
-    def _on_finish(self, arrival: Arrival, meta: Dict) -> None:
+    def _retime_worker(self, w: Worker, exclude: int = -1) -> None:
+        """Dynamic mode: a co-runner started/finished on ``w`` — advance
+        each running invocation's progress under its old slowdown, apply
+        the new one, and re-queue its finish (the generation counter
+        voids the stale event)."""
         now = self.now
-        run = self._running.pop(arrival.invocation_id)
+        for iid, r in self._worker_running[w.wid].items():
+            if iid == exclude:
+                continue
+            r.base_remaining = max(
+                r.base_remaining - (now - r.last_t) / r.slow, 0.0)
+            r.slow = self._contention(w, r.result.function, 0.0, 0.0)
+            r.last_t = now
+            r.gen += 1
+            self._push(now + r.base_remaining * r.slow, "finish",
+                       (r.arrival, r.meta, r.gen))
+
+    def _on_finish(self, arrival: Arrival, meta: Dict, gen: int) -> None:
+        now = self.now
+        run = self._running.get(arrival.invocation_id)
+        if run is None or gen != run.gen:
+            return  # superseded by a dynamic-contention retime
+        del self._running[arrival.invocation_id]
         res, c, w = run.result, run.container, run.worker
+        del self._worker_running[w.wid][arrival.invocation_id]
+        w.remove_active(run.demand_vcpus, run.net_gbps)
         res.finish_t = now
+        if self.dynamic:
+            res.exec_s = now - res.start_t
         w.release(c.vcpus, c.mem_mb)
         c.busy = False
         c.last_used = now
@@ -290,6 +369,8 @@ class Simulator:
             oom_killed=res.oom_killed,
         )
         self.policy.feedback(arrival, meta, res, self)
+        if self.dynamic:
+            self._retime_worker(w)  # departures speed co-runners up
 
     # ------------------------------------------------------------ run
     def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
@@ -300,6 +381,7 @@ class Simulator:
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             self.now = t
+            self.events_processed += 1
             if kind == "arrival":
                 arrival, first_seen = payload
                 self._on_arrival(arrival, first_seen)
@@ -310,8 +392,8 @@ class Simulator:
                 self._start(arrival, meta, alloc, c, cold=True,
                             first_seen=first_seen, cold_latency=lat)
             elif kind == "finish":
-                arrival, meta = payload
-                self._on_finish(arrival, meta)
+                arrival, meta, gen = payload
+                self._on_finish(arrival, meta, gen)
             elif kind == "reap":
                 self.scheduler.reap_idle(self.now)
                 if self._events:

@@ -1,4 +1,5 @@
-"""Azure-trace-style workload generation (paper §7.1).
+"""Workload generation: the Azure-trace shape (paper §7.1) plus a
+registry of named load scenarios.
 
 The paper samples a ten-minute window from the Azure Functions trace
 [Shahrad et al. 2020], randomizes start times within each minute, and
@@ -7,13 +8,22 @@ its published characteristics — heavy-tailed per-minute invocation
 counts (most functions rare, a few hot) and bursty minutes — using a
 seeded generator, then apply exactly the paper's per-minute
 start-time randomization and RPS subsampling.
+
+Because allocation quality flips under bursty versus steady load
+(Fifer, arXiv 2008.12819; the Freedom/Opportunity study, arXiv
+2105.14845), evaluation also needs the other load shapes a production
+FaaS sees. ``SCENARIOS`` names them: ``azure`` (the trace shape above),
+``poisson-steady``, ``flash-crowd``, ``diurnal``, ``heavy-tail-inputs``,
+``cold-storm``, and ``oversubscribe`` (the §7.5 study). Each generator
+is a pure seeded function of a :class:`ScenarioSpec`, so a (spec, seed)
+pair always yields the identical ``Arrival`` list.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -78,3 +88,226 @@ def generate_trace(
             )
     arrivals.sort(key=lambda a: a.t)
     return arrivals
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    """A named, seeded, parameterized load scenario.
+
+    ``params`` carries the scenario-specific knobs (spike multiplier,
+    input-skew exponent, clone count, ...); every generator documents
+    the keys it reads and their defaults, so an empty ``params`` always
+    works.
+    """
+
+    scenario: str = "azure"
+    rps: float = 4.0
+    duration_s: float = 600.0
+    seed: int = 0
+    params: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def param(self, key: str, default: float) -> float:
+        return float(self.params.get(key, default))
+
+
+# generator signature: (spec, functions, inputs_per_function, rng) -> arrivals
+ScenarioFn = Callable[
+    [ScenarioSpec, List[str], Mapping[str, int], np.random.Generator],
+    List["Arrival"],
+]
+
+SCENARIOS: Dict[str, ScenarioFn] = {}
+
+
+def register_scenario(name: str) -> Callable[[ScenarioFn], ScenarioFn]:
+    def deco(fn: ScenarioFn) -> ScenarioFn:
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def generate_scenario(
+    spec: ScenarioSpec,
+    functions: Sequence[str],
+    inputs_per_function: Mapping[str, int],
+) -> List[Arrival]:
+    """Generate the arrival trace for ``spec``.
+
+    Invocation ids are renumbered 0..n-1 after the final time sort, so
+    two calls with the same spec return *identical* Arrival lists
+    (unlike the process-global counter ``generate_trace`` keeps for
+    backward compatibility).
+    """
+    try:
+        gen = SCENARIOS[spec.scenario]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {spec.scenario!r}; known: {list_scenarios()}"
+        ) from None
+    rng = np.random.default_rng(spec.seed)
+    arrivals = gen(spec, list(functions), inputs_per_function, rng)
+    arrivals.sort(key=lambda a: a.t)
+    for i, a in enumerate(arrivals):
+        a.invocation_id = i
+    return arrivals
+
+
+# ------------------------------------------------------------------ helpers
+def _poisson_times(rate: float, duration_s: float,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Homogeneous Poisson arrival times on [0, duration)."""
+    if rate <= 0.0 or duration_s <= 0.0:
+        return np.empty(0)
+    n = int(rng.poisson(rate * duration_s))
+    return np.sort(rng.uniform(0.0, duration_s, size=n))
+
+
+def _thinned_times(rate_fn: Callable[[np.ndarray], np.ndarray],
+                   peak_rate: float, duration_s: float,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Inhomogeneous Poisson via thinning against ``peak_rate``."""
+    cand = _poisson_times(peak_rate, duration_s, rng)
+    if cand.size == 0:
+        return cand
+    accept = rate_fn(cand) / peak_rate
+    # thinning is only correct when peak_rate bounds rate_fn; a silent
+    # clamp here would generate a wrong (too-light) trace
+    assert float(accept.max()) <= 1.0 + 1e-9, (
+        "rate_fn exceeds peak_rate; thinning bound violated"
+    )
+    keep = rng.uniform(0.0, 1.0, size=cand.size) < accept
+    return cand[keep]
+
+
+def _assemble(times: np.ndarray, functions: List[str],
+              pop: np.ndarray, inputs_per_function: Mapping[str, int],
+              rng: np.random.Generator,
+              input_weights: Optional[Callable[[int], np.ndarray]] = None,
+              ) -> List[Arrival]:
+    """Sample (function, input) per arrival time.
+
+    ``input_weights(n)`` returns the idx-sampling distribution for a
+    pool of n inputs; None means uniform. Pools are built smallest ->
+    largest, so weights skewed toward high indices skew toward large
+    inputs.
+    """
+    out: List[Arrival] = []
+    if times.size == 0:
+        return out
+    fis = rng.choice(len(functions), size=times.size, p=pop)
+    for t, fi in zip(times, fis):
+        fn = functions[fi]
+        n_inputs = inputs_per_function[fn]
+        if input_weights is None:
+            idx = int(rng.integers(n_inputs))
+        else:
+            idx = int(rng.choice(n_inputs, p=input_weights(n_inputs)))
+        out.append(Arrival(next(_inv_ids), float(t), fn, idx))
+    return out
+
+
+# --------------------------------------------------------------- scenarios
+@register_scenario("azure")
+def _azure(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """The seed generator: Azure-trace shape (bursty minutes + Zipf
+    popularity). params: uniform_popularity (0/1, default 0)."""
+    return generate_trace(
+        rps=spec.rps, functions=functions,
+        inputs_per_function=dict(inputs_per_function),
+        duration_s=spec.duration_s, seed=spec.seed,
+        uniform_popularity=bool(spec.param("uniform_popularity", 0)),
+    )
+
+
+@register_scenario("poisson-steady")
+def _poisson_steady(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Memoryless steady load — the opposite pole from azure's bursty
+    minutes. params: none."""
+    pop = function_popularity(functions, rng)
+    times = _poisson_times(spec.rps, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("flash-crowd")
+def _flash_crowd(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Steady baseline with a spike window at ``spike_mult`` x baseline
+    RPS (default 8x — Fifer's burst regime). params: spike_mult,
+    spike_start_frac (default 0.4), spike_duration_s (default 60)."""
+    mult = spec.param("spike_mult", 8.0)
+    t0 = spec.param("spike_start_frac", 0.4) * spec.duration_s
+    t1 = min(t0 + spec.param("spike_duration_s", 60.0), spec.duration_s)
+    pop = function_popularity(functions, rng)
+
+    def rate(t: np.ndarray) -> np.ndarray:
+        return np.where((t >= t0) & (t < t1), spec.rps * mult, spec.rps)
+
+    # spike_mult < 1 models a load DIP, so the baseline is the peak
+    peak = spec.rps * max(mult, 1.0)
+    times = _thinned_times(rate, peak, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("diurnal")
+def _diurnal(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Sinusoidal day/night swing around the mean RPS. params: amp
+    (default 0.6), cycles over the window (default 1)."""
+    amp = min(max(spec.param("amp", 0.6), 0.0), 0.95)
+    cycles = spec.param("cycles", 1.0)
+    pop = function_popularity(functions, rng)
+
+    def rate(t: np.ndarray) -> np.ndarray:
+        phase = 2.0 * np.pi * cycles * t / spec.duration_s
+        return spec.rps * (1.0 + amp * np.sin(phase - np.pi / 2.0))
+
+    times = _thinned_times(rate, spec.rps * (1.0 + amp), spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("heavy-tail-inputs")
+def _heavy_tail_inputs(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Steady load whose input-size distribution is skewed to each
+    profile's large end (pools are sorted smallest -> largest), probing
+    the §2.1 non-linear size->time regime. params: skew (weight
+    exponent, default 3.0)."""
+    skew = spec.param("skew", 3.0)
+    pop = function_popularity(functions, rng)
+    times = _poisson_times(spec.rps, spec.duration_s, rng)
+
+    def input_weights(n: int) -> np.ndarray:
+        w = (np.arange(1, n + 1, dtype=np.float64)) ** skew
+        return w / w.sum()
+
+    return _assemble(times, functions, pop, inputs_per_function, rng,
+                     input_weights=input_weights)
+
+
+@register_scenario("cold-storm")
+def _cold_storm(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Many unique, rarely-repeating functions — the keep-alive-defeating
+    long tail of the Azure trace. Uniform popularity over the (cloned,
+    see ``expand_function_clones``) function set so per-function arrival
+    rate stays below warm-hit territory. params: clones (consumed by the
+    experiment layer, default 6)."""
+    pop = np.full(len(functions), 1.0 / len(functions))
+    times = _poisson_times(spec.rps, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("oversubscribe")
+def _oversubscribe(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Offered load beyond cluster vCPUs (the §7.5 study): steady
+    arrivals at ``load_mult`` x the nominal RPS, driving queueing,
+    retries, and timeouts. params: load_mult (default 3.0)."""
+    mult = spec.param("load_mult", 3.0)
+    pop = function_popularity(functions, rng)
+    times = _poisson_times(spec.rps * mult, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)

@@ -1,9 +1,11 @@
 """Unit + property tests for the CSOAA allocator and cost functions."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
 
 from repro.core.allocator import Allocation, OnlineCSC, ResourceAllocator
 from repro.core.cost_functions import (

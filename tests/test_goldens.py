@@ -1,0 +1,55 @@
+"""Golden-metrics regression harness.
+
+Each registered scenario has a tiny fixed-seed run whose ``summarize()``
+output is snapshotted in tests/goldens/<scenario>.json. A behavioral
+change anywhere in the workload -> allocator -> scheduler -> simulator
+stack shows up as a golden diff here. Refresh intentionally with
+``PYTHONPATH=src python scripts/refresh_goldens.py`` and commit the
+result.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+from repro.serving.golden import ATOL, RTOL, golden_specs, run_golden
+from repro.serving.workload import list_scenarios
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+def _load(scenario):
+    path = os.path.join(GOLDEN_DIR, f"{scenario}.json")
+    assert os.path.exists(path), (
+        f"missing golden snapshot {path}; run scripts/refresh_goldens.py"
+    )
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_registry_fully_snapshotted():
+    """Every registered scenario has a committed snapshot, and vice
+    versa — adding a scenario without a golden (or orphaning one) fails."""
+    assert len(list_scenarios()) >= 7
+    on_disk = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
+    assert on_disk == set(list_scenarios())
+
+
+@pytest.mark.parametrize("scenario", list_scenarios())
+def test_golden_metrics(scenario):
+    golden = _load(scenario)
+    spec = golden_specs()[scenario]
+    import dataclasses
+    assert golden["spec"] == dataclasses.asdict(spec), (
+        "golden was generated from a different spec; refresh goldens"
+    )
+    got = run_golden(scenario)
+    want = golden["summary"]
+    assert set(got) == set(want)
+    for key, expect in want.items():
+        actual = got[key]
+        assert math.isclose(actual, expect, rel_tol=RTOL, abs_tol=ATOL), (
+            f"{scenario}.{key}: got {actual!r}, golden {expect!r}"
+        )

@@ -1,11 +1,13 @@
 """Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
 sweeping shapes and dtypes (hypothesis for the shape grids)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention

@@ -1,9 +1,12 @@
 """Property tests for the ring-buffer KV cache (hypothesis)."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
 
 from repro.models.kv_cache import (
     ring_positions,

@@ -1,5 +1,7 @@
 """Scheduler unit tests: the §5 routing priority and placement rules."""
 
+import random
+
 import pytest
 
 from repro.core.allocator import Allocation
@@ -88,3 +90,83 @@ def test_packing_placement_fills_loaded_worker_first():
     cluster.workers[1].acquire(8, 100)
     d = sched.schedule("f", Allocation(4, 512, True), now=0.0)
     assert d.background_launch[0].wid == 1  # most-loaded with capacity
+
+
+# ------------------------------------------------------------ invariants
+def test_case_preference_ordering():
+    """§5 priority: exact warm > smallest-larger warm > cold, checked by
+    peeling the preferred option away one step at a time."""
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    exact = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    larger_close = cluster.new_container(w, "f", 6, 768, now=0.0, warm_at=0.0)
+    larger_far = cluster.new_container(w, "f", 8, 2048, now=0.0, warm_at=0.0)
+    alloc = Allocation(4, 512, True)
+
+    d = sched.schedule("f", alloc, now=1.0)
+    assert d.container is exact and not d.cold_start
+
+    exact.busy = True
+    d = sched.schedule("f", alloc, now=1.0)
+    assert d.container is larger_close and not d.cold_start
+
+    larger_close.busy = True
+    d = sched.schedule("f", alloc, now=1.0)
+    assert d.container is larger_far and not d.cold_start
+
+    larger_far.busy = True
+    d = sched.schedule("f", alloc, now=1.0)
+    assert d.container is None and d.cold_start
+
+
+def test_capacity_never_exceeded_after_any_schedule_sequence():
+    """Drive a seeded random schedule/finish sequence the way the
+    simulator does and assert no decision ever pushes a worker past its
+    vCPU limit or physical memory."""
+    cluster, sched = _mk(n_workers=3)
+    rng = random.Random(0)
+    fns = ["f", "g", "h", "i"]
+    running = []  # (container, vcpus, mem)
+    now = 0.0
+    for step in range(400):
+        now += rng.random()
+        if running and rng.random() < 0.4:
+            c, v, m = running.pop(rng.randrange(len(running)))
+            c.worker.release(v, m)
+            c.busy = False
+            c.last_used = now
+            continue
+        fn = rng.choice(fns)
+        alloc = Allocation(rng.choice([2, 4, 8, 12]),
+                           rng.choice([256, 512, 1024, 2048]), True)
+        d = sched.schedule(fn, alloc, now)
+        if d.queued:
+            continue
+        if d.container is not None:
+            c = d.container
+        else:
+            w, v, m = d.background_launch
+            c = cluster.new_container(w, fn, v, m, now, warm_at=now)
+        c.busy = True
+        c.worker.acquire(c.vcpus, c.mem_mb)
+        running.append((c, c.vcpus, c.mem_mb))
+        for w in cluster.workers:
+            assert w.used_vcpus <= w.vcpu_limit
+            assert w.used_mem_mb <= w.total_mem_mb
+            assert w.used_vcpus >= 0 and w.used_mem_mb >= 0
+
+
+def test_reap_never_reaps_busy_container():
+    cluster, sched = _mk()
+    w = cluster.workers[0]
+    busy = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    busy.busy = True
+    busy.last_used = 0.0  # long past keep-alive, but still running
+    idle = cluster.new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+    idle.last_used = 0.0
+    assert sched.reap_idle(now=10_000.0) == 1
+    assert busy.cid in w.containers
+    assert idle.cid not in w.containers
+    # warm-index bookkeeping follows the reap
+    assert busy.cid in w.by_function["f"]
+    assert idle.cid not in w.by_function["f"]

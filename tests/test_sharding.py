@@ -20,7 +20,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _fake_mesh(shape=(16, 16), axes=("data", "model")):
     """AbstractMesh carries shape/axis info without real devices."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_param_specs_cover_tree_and_respect_divisibility():
