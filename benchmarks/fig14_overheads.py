@@ -43,6 +43,7 @@ def run() -> None:
 
     # scheduler decision
     sched = ShabariScheduler(Cluster())
-    a = Allocation(vcpus=8, mem_mb=1024, predicted=True)
+    a = Allocation(vcpus=8, mem_mb=1024, vcpu_predicted=True,
+                   mem_predicted=True)
     emit("fig14_schedule", time_us(lambda: sched.schedule("matmult", a, 0.0),
                                    iters=200), "per_invocation")

@@ -1,0 +1,119 @@
+"""Front-door router sweep: 1/2/4 clusters x {hashing, spill-over,
+random} routing on the flash-crowd and oversubscribe scenarios.
+
+The TOTAL worker footprint is held constant across cluster counts
+(16 workers as 1x16, 2x8, or 4x4), so every row sees the same hardware
+and the same arrival trace — only the routing layer differs. ``hashing``
+pins each function to its home cluster (pure warm-pool locality, the
+Fifer-style underutilization regime: hot functions saturate their
+cluster while others idle); ``spill-over`` adds cold-start-aware load
+spreading on top of the same locality; ``random`` is the load-oblivious
+control. The headline row compares spill-over against hashing at each
+cluster count: confining a hot function to a single cluster costs SLO
+compliance that spill-over recovers.
+
+  PYTHONPATH=src python -m benchmarks.router_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import QUICK, emit
+from repro.serving import baselines as B
+from repro.serving.experiment import make_policy
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import SimConfig, Simulator, summarize
+from repro.serving.workload import ScenarioSpec, generate_scenario
+
+TOTAL_WORKERS = 8 if QUICK else 16
+DURATION_S = 240.0 if QUICK else 360.0
+RPS = 1.0 if QUICK else 2.0  # offered load scales with the fleet
+CLUSTER_COUNTS = (1, 2, 4)
+ROUTINGS = ("hashing", "spill-over", "random")
+# Loads chosen so the HOT cluster saturates while total capacity still
+# suffices — the front-door regime. (At sustained whole-fleet overload
+# no routing policy can win: shedding work via queue timeouts then
+# "beats" completing it late on every per-invocation metric.)
+SCENARIOS = {
+    "flash-crowd": {"spike_mult": 4.0},
+    "oversubscribe": {"load_mult": 1.6},
+}
+POLICY = "shabari"
+
+
+def _cfg(n_clusters: int, routing: str) -> SimConfig:
+    # vcpu_limit > physical_cores: workers oversubscribe vCPUs (the §6
+    # userCPU knob, 90-vCPU allocs on 96 cores in the paper's testbed),
+    # so per-worker demand above the core count slows co-runners down —
+    # the regime where load-aware routing pays and load-oblivious
+    # admission keeps piling demand onto already-contended workers
+    return SimConfig(
+        n_workers=TOTAL_WORKERS // n_clusters,
+        n_clusters=n_clusters,
+        routing=routing,
+        vcpus_per_worker=44,
+        physical_cores=32,
+        mem_mb_per_worker=16 * 1024,
+        vcpu_limit=44,
+        retry_interval_s=1.0,
+        queue_timeout_s=60.0,
+        seed=0,
+    )
+
+
+def _run_cell(trace, profiles, pool, slo_table, n_clusters, routing):
+    policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=_cfg(n_clusters, routing))
+    t0 = time.perf_counter()
+    summary = summarize(sim.run(trace))
+    wall = time.perf_counter() - t0
+    return summary, sim.router, wall
+
+
+def run() -> None:
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo_table = B.build_slo_table(profiles, pool)
+
+    for scenario, params in SCENARIOS.items():
+        spec = ScenarioSpec(scenario=scenario, rps=RPS, duration_s=DURATION_S,
+                            seed=0, params=dict(params))
+        trace = generate_scenario(
+            spec, functions=sorted(profiles),
+            inputs_per_function={f: len(pool[f]) for f in profiles},
+        )
+        viol = {}
+        for n_clusters in CLUSTER_COUNTS:
+            for routing in ROUTINGS:
+                if n_clusters == 1 and routing != "hashing":
+                    continue  # one cluster: every routing is identical
+                summary, router, wall = _run_cell(
+                    trace, profiles, pool, slo_table, n_clusters, routing)
+                viol[(n_clusters, routing)] = summary["slo_violation_pct"]
+                emit(
+                    f"router_bench.{scenario}.c{n_clusters}.{routing}",
+                    wall * 1e6 / max(len(trace), 1),
+                    f"n={len(trace)}"
+                    f"|slo_viol_pct={summary['slo_violation_pct']:.2f}"
+                    f"|cold_start_pct={summary['cold_start_pct']:.2f}"
+                    f"|timeout_pct={summary['timeout_pct']:.2f}"
+                    f"|spills_warm={router.spills_warm}"
+                    f"|spills_cold={router.spills_cold}",
+                )
+        for n_clusters in CLUSTER_COUNTS[1:]:
+            gain = (viol[(n_clusters, "hashing")]
+                    - viol[(n_clusters, "spill-over")])
+            emit(
+                f"router_bench.{scenario}.c{n_clusters}.spill_gain",
+                0.0,
+                f"slo_viol_reduction_pts={gain:.2f}"
+                f"|hashing={viol[(n_clusters, 'hashing')]:.2f}"
+                f"|spill-over={viol[(n_clusters, 'spill-over')]:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

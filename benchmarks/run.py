@@ -25,6 +25,7 @@ MODULES = [
     ("table3", "benchmarks.table3_container_sizes"),
     ("scenario_matrix", "benchmarks.scenario_matrix"),
     ("sim_bench", "benchmarks.sim_bench"),
+    ("router_bench", "benchmarks.router_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]

@@ -4,7 +4,9 @@ The paper's Figure 8 compares policies at one load shape (the Azure
 trace). Allocation quality flips under bursty versus steady load
 (Fifer, arXiv 2008.12819), so this matrix runs each policy against all
 registered scenarios: azure, poisson-steady, flash-crowd, diurnal,
-heavy-tail-inputs, cold-storm, oversubscribe.
+heavy-tail-inputs, cold-storm, oversubscribe, and multi-cluster (run
+here on the default single-cluster testbed — its workload shape alone;
+the routing layer it targets is swept in benchmarks/router_bench.py).
 
 Rows: ``scenario_matrix.<scenario>.<policy>,<wall_us>,<metrics>``.
 Set BENCH_QUICK=1 for a reduced grid (3 policies, shorter traces).

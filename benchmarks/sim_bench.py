@@ -1,16 +1,24 @@
 """Simulator-core throughput: events/sec on a 10k-invocation trace.
 
-A/B of the incremental simulator core — per-worker contention
-aggregates (Worker.active_demand_vcpus / active_net_gbps, maintained on
-start/finish) plus the per-function warm-container index — against the
-pre-refactor O(running)/O(containers) scans, kept behind
-``SimConfig.legacy_scans``. Both runs must produce identical
-``summarize()`` metrics — the refactor is a pure fast path.
+Two A/Bs, each against a pre-fix path kept behind a SimConfig switch:
 
-The trace is heavy-tail-inputs under memory-centric scheduling (vCPU
-oversubscription), which holds hundreds of invocations running
-concurrently — the regime where the per-event scans made large traces
-slow to evaluate.
+* ``legacy_scans`` — the incremental simulator core (per-worker
+  contention aggregates + per-function warm-container index) vs the
+  O(running)/O(containers) scans. Both runs must produce identical
+  ``summarize()`` metrics — the refactor is a pure fast path. The trace
+  is heavy-tail-inputs under memory-centric scheduling (vCPU
+  oversubscription), which holds hundreds of invocations running
+  concurrently.
+
+* ``legacy_retry_alloc`` — the cached-retry-allocation fix vs the
+  pre-fix retry path that re-ran ``policy.allocate`` (a jit'd jax
+  dispatch per predict for learning policies) on every 0.5 s retry of a
+  queued invocation. Measured on the oversubscribe scenario, whose
+  retry storm is where the per-retry dispatch dominated. For
+  deterministic-allocation policies the fix is metric-neutral even
+  under saturation (same allocation on every retry), which the bench
+  asserts with static-large; for learning policies only QUEUED
+  invocations can change (they now keep their first prediction).
 
   PYTHONPATH=src python -m benchmarks.sim_bench
 """
@@ -47,6 +55,72 @@ def _run_once(trace, profiles, pool, slo_table, *, legacy: bool):
     return sim.events_processed, wall, summarize(results)
 
 
+# --------------------------------------------------------- retry-path A/B
+RETRY_RPS = 1.5 if QUICK else 2.0
+RETRY_DURATION_S = 120.0 if QUICK else 240.0
+
+
+def _run_retry(trace, profiles, pool, slo_table, *, policy: str, legacy: bool):
+    # a small saturating cluster: the oversubscribe backlog retries every
+    # 0.5 s, so the retry path dominates event count
+    cfg = SimConfig(n_workers=4, vcpus_per_worker=32, physical_cores=32,
+                    mem_mb_per_worker=16 * 1024, vcpu_limit=32,
+                    retry_interval_s=0.5, queue_timeout_s=60.0, seed=0,
+                    legacy_retry_alloc=legacy)
+    pol = make_policy(policy, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=cfg)
+    t0 = time.perf_counter()
+    results = sim.run(trace)
+    wall = time.perf_counter() - t0
+    return sim.events_processed, wall, summarize(results)
+
+
+def run_retry_ab(profiles, pool, slo_table) -> None:
+    spec = ScenarioSpec(scenario="oversubscribe", rps=RETRY_RPS,
+                        duration_s=RETRY_DURATION_S, seed=0,
+                        params={"load_mult": 4.0})
+    trace = generate_scenario(
+        spec, functions=sorted(profiles),
+        inputs_per_function={f: len(pool[f]) for f in profiles},
+    )
+
+    # throwaway warm-up: trace shabari's jit kernels (predict/update per
+    # feature-dim shape) so the one-time compiles are charged to neither
+    # timed leg below
+    _run_retry(trace[: max(len(trace) // 4, 1)], profiles, pool, slo_table,
+               policy="shabari", legacy=False)
+
+    # the events/sec win: shabari's jit'd predict no longer runs per retry
+    ev_legacy, wall_legacy, _ = _run_retry(
+        trace, profiles, pool, slo_table, policy="shabari", legacy=True)
+    ev_fast, wall_fast, _ = _run_retry(
+        trace, profiles, pool, slo_table, policy="shabari", legacy=False)
+    eps_legacy = ev_legacy / wall_legacy
+    eps_fast = ev_fast / wall_fast
+    emit("sim_bench.retry_legacy", wall_legacy / ev_legacy * 1e6,
+         f"n={len(trace)}|events={ev_legacy}|events_per_sec={eps_legacy:.0f}")
+    emit("sim_bench.retry_cached", wall_fast / ev_fast * 1e6,
+         f"n={len(trace)}|events={ev_fast}|events_per_sec={eps_fast:.0f}")
+
+    # metric neutrality: with a deterministic allocation the cached and
+    # re-predicted retry paths are the same decision sequence, queued
+    # and timed-out invocations included
+    _, _, sum_legacy = _run_retry(
+        trace, profiles, pool, slo_table, policy="static-large", legacy=True)
+    _, _, sum_fast = _run_retry(
+        trace, profiles, pool, slo_table, policy="static-large", legacy=False)
+    emit("sim_bench.retry_speedup", 0.0,
+         f"x{eps_fast / eps_legacy:.2f}"
+         f"|static_metrics_identical={sum_fast == sum_legacy}")
+    if sum_fast != sum_legacy:
+        # this is the CI gate for the cached-retry fast path, not just
+        # a printed observation
+        raise RuntimeError(
+            "retry-allocation cache changed metrics for a deterministic "
+            f"policy: {sum_fast} != {sum_legacy}")
+
+
 def run() -> None:
     profiles = build_profiles()
     pool = build_input_pool(seed=0)
@@ -73,6 +147,8 @@ def run() -> None:
          f"n={len(trace)}|events={ev_fast}|events_per_sec={eps_fast:.0f}")
     emit("sim_bench.speedup", 0.0,
          f"x{eps_fast / eps_legacy:.2f}|metrics_identical={sum_fast == sum_legacy}")
+
+    run_retry_ab(profiles, pool, slo_table)
 
 
 if __name__ == "__main__":

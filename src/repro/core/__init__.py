@@ -13,6 +13,7 @@ from repro.core.cost_functions import (
 )
 from repro.core.featurizer import Featurizer
 from repro.core.metadata_store import MetadataStore
+from repro.core.router import Router
 from repro.core.scheduler import ShabariScheduler
 
 __all__ = [
@@ -20,6 +21,7 @@ __all__ = [
     "ResourceAllocator",
     "Allocation",
     "Featurizer",
+    "Router",
     "ShabariScheduler",
     "MetadataStore",
     "absolute_vcpu_costs",

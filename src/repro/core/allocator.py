@@ -48,7 +48,20 @@ MEM_CONFIDENCE = 2 * VCPU_CONFIDENCE
 class Allocation:
     vcpus: int
     mem_mb: int
-    predicted: bool  # False while below the confidence threshold
+    # Per-resource prediction provenance: each flag is True only when the
+    # corresponding agent is past its confidence threshold AND its
+    # prediction survived the safeguards (a memory prediction below the
+    # input-object floor falls back to the default, so it is NOT a
+    # prediction the system is actually serving).
+    vcpu_predicted: bool = False
+    mem_predicted: bool = False
+
+    @property
+    def predicted(self) -> bool:
+        """True only when BOTH resources come from past-confidence agents
+        (the vCPU flag alone used to masquerade as this aggregate while
+        memory still served the 4 GB default)."""
+        return self.vcpu_predicted and self.mem_predicted
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -149,21 +162,26 @@ class ResourceAllocator:
     ) -> Allocation:
         """Predict (vcpus, memory) for one invocation (paper Fig. 5 step 3)."""
         ag = self._get(function, len(features))
-        predicted = False
-        if ag.vcpu.updates >= self.vcpu_confidence:
+        vcpu_predicted = ag.vcpu.updates >= self.vcpu_confidence
+        if vcpu_predicted:
             vcpus = ag.vcpu.predict(features) + 1
-            predicted = True
         else:
             vcpus = self.default_vcpus
-        if ag.mem.updates >= self.mem_confidence:
+        mem_predicted = ag.mem.updates >= self.mem_confidence
+        if mem_predicted:
             mem_class = ag.mem.predict(features) + 1
             mem_mb = mem_class * self.mem_class_mb
             # Safeguard: allocation must exceed the input object size.
+            # Falling back to the default means the served memory is NOT
+            # a prediction, so the flag drops with it.
             if mem_mb < input_size_mb:
                 mem_mb = self.default_mem_class * self.mem_class_mb
+                mem_predicted = False
         else:
             mem_mb = self.default_mem_class * self.mem_class_mb
-        return Allocation(vcpus=vcpus, mem_mb=mem_mb, predicted=predicted)
+        return Allocation(vcpus=vcpus, mem_mb=mem_mb,
+                          vcpu_predicted=vcpu_predicted,
+                          mem_predicted=mem_predicted)
 
     def feedback(self, function: str, features: np.ndarray, obs: Observation) -> None:
         """Close the loop with the daemon's observation (Fig. 5 step 5)."""

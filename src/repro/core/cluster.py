@@ -45,6 +45,9 @@ class Worker:
     vcpu_limit: int = 90
     used_vcpus: int = 0
     used_mem_mb: int = 0
+    # owning-cluster backref so acquire/release can maintain the
+    # cluster-level load aggregates (None for standalone Workers)
+    cluster: Optional["Cluster"] = dataclasses.field(default=None, repr=False)
     # Incremental aggregates over RUNNING invocations (parallel demand
     # and object-store NIC draw) so contention lookups are O(1) instead
     # of a scan over every running invocation per event.
@@ -68,11 +71,17 @@ class Worker:
     def acquire(self, vcpus: int, mem_mb: int) -> None:
         self.used_vcpus += vcpus
         self.used_mem_mb += mem_mb
+        if self.cluster is not None:
+            self.cluster.used_vcpus += vcpus
+            self.cluster.used_mem_mb += mem_mb
 
     def release(self, vcpus: int, mem_mb: int) -> None:
         self.used_vcpus -= vcpus
         self.used_mem_mb -= mem_mb
         assert self.used_vcpus >= 0 and self.used_mem_mb >= 0
+        if self.cluster is not None:
+            self.cluster.used_vcpus -= vcpus
+            self.cluster.used_mem_mb -= mem_mb
 
     def add_active(self, demand_vcpus: float, net_gbps: float) -> None:
         self.active_demand_vcpus += demand_vcpus
@@ -108,12 +117,17 @@ class Cluster:
         # lookup (see Simulator's SimConfig.legacy_scans) for A/B
         # benchmarking; results are identical either way.
         self.legacy_scans = legacy_scans
+        # cluster-level load aggregates, maintained by Worker.acquire/
+        # release — the router's O(1) spill-target metric
+        self.used_vcpus = 0
+        self.used_mem_mb = 0
         self.workers = [
             Worker(
                 wid=i,
                 total_vcpus=vcpus_per_worker,
                 total_mem_mb=mem_mb_per_worker,
                 vcpu_limit=vcpu_limit or vcpus_per_worker,
+                cluster=self,
             )
             for i in range(n_workers)
         ]
@@ -142,6 +156,11 @@ class Cluster:
         if byf is not None:
             byf.pop(c.cid, None)
 
+    def has_idle_warm(self, function: str, now: float) -> bool:
+        """Emptiness probe — the router's warm-spill pre-check; defers
+        to Worker.idle_warm so the predicate has one source of truth."""
+        return any(w.idle_warm(function, now) for w in self.workers)
+
     def idle_warm(self, function: str, now: float) -> List[Container]:
         out: List[Container] = []
         if self.legacy_scans:
@@ -157,7 +176,4 @@ class Cluster:
         return out
 
     def total_used(self) -> Tuple[int, int]:
-        return (
-            sum(w.used_vcpus for w in self.workers),
-            sum(w.used_mem_mb for w in self.workers),
-        )
+        return (self.used_vcpus, self.used_mem_mb)

@@ -1,0 +1,181 @@
+"""Front-door router: the multi-cluster tier above §5 scheduling.
+
+The paper's testbed is a single 16-worker cluster; a production FaaS
+front door balances MANY clusters, where container-pool locality and
+spill-over dominate behavior under flash crowds (Fifer, arXiv
+2008.12819) and multi-cluster routing is the open decision layer above
+per-invocation right-sizing (arXiv 2510.02404). The router applies the
+same cold-start-aware philosophy as Shabari's scheduler, one level up:
+
+* ``hashing`` — each function is hashed to a "home" cluster and always
+  routed there (warm-pool locality, no load awareness);
+* ``spill-over`` (default) — route to the home cluster while it can
+  serve the invocation; when the home cluster has no warm container,
+  prefer a WARM container on a remote cluster over a local cold start,
+  and when the home cluster is saturated, spill to the least-loaded
+  remote cluster with capacity;
+* ``random`` — seeded uniform cluster choice (the load-oblivious
+  baseline for benchmarks/router_bench).
+
+``route`` composes per-cluster :class:`ShabariScheduler` decisions and
+is itself side-effect-free: like ``schedule``, it only inspects state,
+so the runtime remains the sole owner of load mutation.
+
+Known limitation (inherited from the simulator's load accounting, where
+it predates the router): a cold-started container holds no load until
+its warm-up completes, so arrivals inside that ~0.5-1 s window see an
+unchanged cluster load and can herd onto the same least-loaded remote.
+The fix — reserving capacity at placement rather than at start, for
+both ``Worker.fits`` and ``_load`` — is a ROADMAP follow-on because it
+changes admission semantics (and every golden) across the whole stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from typing import List, Sequence
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.scheduler import Decision, ShabariScheduler
+
+ROUTING_POLICIES = ("hashing", "spill-over", "random")
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    cluster_idx: int
+    decision: Decision
+    spilled: bool = False  # placed off the function's home cluster
+
+
+class Router:
+    def __init__(
+        self,
+        clusters: Sequence[Cluster],
+        schedulers: Sequence[ShabariScheduler],
+        *,
+        routing: str = "spill-over",
+        seed: int = 0,
+    ):
+        assert routing in ROUTING_POLICIES, routing
+        assert len(clusters) == len(schedulers) > 0
+        # route() composes schedulers[i] decisions with clusters[i]
+        # load/warm-pool inspection; a mispaired zip would silently
+        # route on the wrong cluster's state
+        assert all(
+            s.cluster is c for c, s in zip(clusters, schedulers)
+        ), "schedulers must be paired 1:1 with clusters, in order"
+        self.clusters: List[Cluster] = list(clusters)
+        self.schedulers: List[ShabariScheduler] = list(schedulers)
+        self.routing = routing
+        self._rng = random.Random(seed)
+        # per-cluster vCPU capacity is fixed for the cluster's lifetime
+        self._capacity = [
+            max(sum(w.vcpu_limit for w in cl.workers), 1)
+            for cl in self.clusters
+        ]
+        # observability counters (benchmarks/router_bench)
+        self.routed_home = 0
+        self.spills_warm = 0  # remote warm container beat a local cold start
+        self.spills_cold = 0  # home saturated; cold-started remotely
+
+    # ------------------------------------------------------------ utils
+    def home_cluster(self, function: str) -> int:
+        # salted so the cluster choice is independent of the scheduler's
+        # home-WORKER hash of the same name: with a shared unsalted hash
+        # and gcd(n_clusters, n_workers) > 1, every function homed on
+        # cluster k would also home on worker k, collapsing the
+        # within-cluster cold-placement spread into packing
+        h = int(hashlib.md5(b"cluster:" + function.encode()).hexdigest(), 16)
+        return h % len(self.clusters)
+
+    def _load(self, ci: int) -> float:
+        """vCPU occupancy fraction — the spill-over target metric.
+        O(1): the cluster maintains its load aggregate on acquire/
+        release, so retry storms don't rescan workers per route."""
+        return self.clusters[ci].used_vcpus / self._capacity[ci]
+
+    # ------------------------------------------------------------ route
+    def route(self, function: str, alloc: Allocation, now: float) -> RouteDecision:
+        n = len(self.clusters)
+        if n == 1:
+            d = self.schedulers[0].schedule(function, alloc, now)
+            if not d.queued:
+                self.routed_home += 1
+            return RouteDecision(0, d)
+
+        if self.routing == "random":
+            ci = self._rng.randrange(n)
+            d = self.schedulers[ci].schedule(function, alloc, now)
+            spilled = ci != self.home_cluster(function)
+            if not spilled:
+                if not d.queued:
+                    self.routed_home += 1
+            elif not d.queued:
+                if d.container is not None:
+                    self.spills_warm += 1
+                else:
+                    self.spills_cold += 1
+            return RouteDecision(ci, d, spilled=spilled)
+
+        home = self.home_cluster(function)
+        d = self.schedulers[home].schedule(function, alloc, now)
+        if self.routing == "hashing" or d.container is not None:
+            # pinned, or a local warm hit (exact or larger) — stay home.
+            # Counters record PLACEMENTS only (queued attempts and their
+            # retries don't count), matching the spills_* semantics.
+            if not d.queued:
+                self.routed_home += 1
+            return RouteDecision(home, d)
+
+        # home has no usable warm container: it would cold-start (if it
+        # has headroom) or queue. Least-loaded-first over the remotes;
+        # ties break on cluster index, keeping the walk deterministic.
+        home_load = self._load(home)
+        remotes = sorted(
+            (self._load(ci), ci) for ci in range(n) if ci != home
+        )
+
+        # cold-start-aware: a remote WARM container beats a local cold
+        # start (container create latency >> cross-cluster routing) —
+        # but only on a remote under LESS load than home. Spilling onto
+        # an equally- or more-loaded cluster trades the cold start for
+        # co-runner contention and smears the function's warm pool
+        # across clusters, raising everyone's future cold-start rate.
+        # route() mutates nothing, so decisions computed here stay valid
+        # for the saturation pass below — no re-scheduling per remote.
+        probed: dict = {}
+        for load, ci in remotes:
+            if load >= home_load:
+                break  # sorted ascending: no better remote exists
+            if not self.clusters[ci].has_idle_warm(function, now):
+                continue
+            rd = probed[ci] = self.schedulers[ci].schedule(function, alloc, now)
+            if rd.container is not None:
+                self.spills_warm += 1
+                return RouteDecision(ci, rd, spilled=True)
+
+        if not d.queued:
+            # no warm container anywhere; home has capacity — cold-start
+            # locally so future invocations find their pool at home
+            self.routed_home += 1
+            return RouteDecision(home, d)
+
+        # home saturated: spill to the least-loaded remote cluster that
+        # can actually take it (its scheduler may still find a warm
+        # container the load-guarded pass above skipped)
+        for _, ci in remotes:
+            rd = probed.get(ci)
+            if rd is None:
+                rd = self.schedulers[ci].schedule(function, alloc, now)
+            if not rd.queued:
+                if rd.container is not None:
+                    self.spills_warm += 1
+                else:
+                    self.spills_cold += 1
+                return RouteDecision(ci, rd, spilled=True)
+
+        return RouteDecision(home, d)  # saturated everywhere -> queued

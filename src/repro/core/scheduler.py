@@ -11,7 +11,7 @@ invocation, decide which container/worker runs it:
 
 Cold placement hashes the function to a "home server" (cache locality,
 like OpenWhisk) and walks forward from it while workers lack capacity;
-if none fits, a random worker is chosen. A packing alternative
+if none fits, the invocation queues for retry. A packing alternative
 (Hermod-style: fill one server before the next) is included for the
 Figure 7b ablation — it loses at high load because co-locating many
 network-hungry invocations saturates the server.
@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import random
 from typing import List, Optional, Tuple
 
 from repro.core.allocator import Allocation
@@ -50,7 +49,6 @@ class ShabariScheduler:
         keep_alive_s: float = 600.0,  # OpenWhisk default keep-alive
         route_larger: bool = True,  # Shabari case (2); off = OpenWhisk mode
         background_launch: bool = True,  # Shabari's proactive exact-size spawn
-        seed: int = 0,
     ):
         assert placement in ("hashing", "packing")
         self.cluster = cluster
@@ -58,7 +56,6 @@ class ShabariScheduler:
         self.keep_alive_s = keep_alive_s
         self.route_larger = route_larger
         self.background_launch = background_launch
-        self._rng = random.Random(seed)
 
     # ------------------------------------------------------------ utils
     def _home_worker(self, function: str) -> int:
@@ -114,13 +111,12 @@ class ShabariScheduler:
                         bg = (w, vcpus, mem)
                 return Decision(chosen, cold_start=False, background_launch=bg)
 
-        # (3) cold start at the exact size
+        # (3) cold start at the exact size; _pick_cold_worker scanned
+        # every worker, so None means no capacity anywhere — queue
         w = self._pick_cold_worker(function, vcpus, mem)
         if w is None:
-            w = self._rng.choice(self.cluster.workers)
-            if not w.fits(vcpus, mem):
-                return Decision(None, cold_start=True, background_launch=None,
-                                queued=True)
+            return Decision(None, cold_start=True, background_launch=None,
+                            queued=True)
         return Decision(None, cold_start=True, background_launch=(w, vcpus, mem))
 
     # ----------------------------------------------------- lifecycle

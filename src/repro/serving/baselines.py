@@ -49,7 +49,7 @@ class StaticPolicy(Policy):
         self.name = name
 
     def allocate(self, arrival, meta, sim):
-        return Allocation(vcpus=self.vcpus, mem_mb=self.mem_mb, predicted=False)
+        return Allocation(vcpus=self.vcpus, mem_mb=self.mem_mb)
 
 
 class ParrotfishPolicy(Policy):
@@ -81,9 +81,9 @@ class ParrotfishPolicy(Policy):
                     continue  # OOM at this size
                 cost = mem / 1024.0 * t  # GB-seconds
                 if cost < best_cost:
-                    best, best_cost = Allocation(vcpus, mem, True), cost
+                    best, best_cost = Allocation(vcpus, mem, True, True), cost
             if best is None:
-                best = Allocation(20, 8192, False)
+                best = Allocation(20, 8192)
             self.alloc_table[fn] = best
 
     def allocate(self, arrival, meta, sim):
@@ -137,7 +137,7 @@ class AquatopePolicy(Policy):
                 y = objective(v, m)
                 if y < best_y:
                     best, best_y = (v, m), y
-            self.alloc_table[fn] = Allocation(best[0], best[1], True)
+            self.alloc_table[fn] = Allocation(best[0], best[1], True, True)
 
     def allocate(self, arrival, meta, sim):
         return self.alloc_table[arrival.function]
@@ -191,7 +191,8 @@ class CypressPolicy(Policy):
         # provisioning) even when arrivals are sparse
         mem = int(math.ceil(self.BATCH_TARGET * mem_share / MEM_CLASS_MB)
                   ) * MEM_CLASS_MB
-        return Allocation(vcpus=2, mem_mb=min(mem, 16 * 1024), predicted=True)
+        return Allocation(vcpus=2, mem_mb=min(mem, 16 * 1024),
+                          vcpu_predicted=True, mem_predicted=True)
 
     def feedback(self, arrival, meta, result, sim):
         fn = arrival.function
@@ -230,6 +231,9 @@ class ShabariPolicy(Policy):
         x = self.featurizer.extract(fn, input_type, meta)
         self._features[arrival.invocation_id] = x
         return self.allocator.allocate(fn, x, input_size_mb(fn, meta))
+
+    def forget(self, arrival):
+        self._features.pop(arrival.invocation_id, None)
 
     def feedback(self, arrival, meta, result, sim):
         x = self._features.pop(arrival.invocation_id, None)

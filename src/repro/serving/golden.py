@@ -16,6 +16,7 @@ To intentionally change behavior, regenerate and commit the snapshots:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 from repro.serving.experiment import run_scenario
@@ -30,13 +31,21 @@ RTOL = 1e-5
 ATOL = 1e-8
 
 
-def golden_sim_config() -> SimConfig:
+# per-scenario SimConfig overrides: multi-cluster splits the same
+# 4-worker footprint into 2 clusters x 2 workers behind the spill-over
+# router, so the golden actually exercises the front door
+_GOLDEN_SIM_OVERRIDES: Dict[str, Dict] = {
+    "multi-cluster": {"n_clusters": 2, "n_workers": 2},
+}
+
+
+def golden_sim_config(scenario: str = "") -> SimConfig:
     """A deliberately small cluster (4 x 32 vCPU x 16 GB) so contention,
     queueing, and (for oversubscribe) timeouts all actually fire inside
     a two-minute trace. The short queue timeout / slow retry cadence
     keep the saturating scenarios from degenerating into retry storms —
     goldens must stay cheap enough for tier-1."""
-    return SimConfig(
+    cfg = SimConfig(
         n_workers=4,
         vcpus_per_worker=32,
         physical_cores=32,
@@ -46,6 +55,7 @@ def golden_sim_config() -> SimConfig:
         queue_timeout_s=45.0,
         seed=0,
     )
+    return dataclasses.replace(cfg, **_GOLDEN_SIM_OVERRIDES.get(scenario, {}))
 
 
 # soften the two saturating shapes just enough that a queue backlog
@@ -70,5 +80,5 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
 def run_golden(scenario: str) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     return run_scenario(
-        GOLDEN_POLICY, spec, sim_cfg=golden_sim_config()
+        GOLDEN_POLICY, spec, sim_cfg=golden_sim_config(scenario)
     ).summary

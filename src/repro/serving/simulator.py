@@ -16,7 +16,14 @@ and contention. Modeled effects, each tied to a paper observation:
 * OOM kills: an invocation whose footprint exceeds its allocation dies
   partway through (§4.3.2 safeguards exist because of this);
 * queueing + timeouts: invocations that cannot be placed retry and
-  eventually time out (the §7.5 oversubscription study).
+  eventually time out (the §7.5 oversubscription study). The
+  Allocation is decided ONCE at first arrival and carried through
+  retries; timed-out invocations report it without re-entering the
+  policy (pre-fix behavior behind ``SimConfig.legacy_retry_alloc``).
+
+``SimConfig(n_clusters=N)`` scales the testbed to N such clusters
+behind a front-door :class:`repro.core.router.Router` (home-cluster
+hashing + cold-start-aware spill-over; ``routing`` picks the policy).
 """
 
 from __future__ import annotations
@@ -43,7 +50,7 @@ NIC_GBPS = 10.0
 
 @dataclasses.dataclass
 class SimConfig:
-    n_workers: int = 16
+    n_workers: int = 16  # workers PER CLUSTER (total = n_workers * n_clusters)
     vcpus_per_worker: int = 90
     physical_cores: int = 96
     mem_mb_per_worker: int = 125 * 1024
@@ -73,6 +80,18 @@ class SimConfig:
     # Metrics are identical either way; only speed differs. Only
     # meaningful with contention_mode="snapshot".
     legacy_scans: bool = False
+    # Multi-cluster front door (repro.core.router): number of clusters
+    # behind the router and the routing policy applied per arrival —
+    # "hashing" | "spill-over" | "random". With n_clusters=1 every
+    # policy degenerates to the single-cluster path.
+    n_clusters: int = 1
+    routing: str = "spill-over"
+    # Compatibility switch for A/B benchmarking (benchmarks/sim_bench):
+    # restore the pre-fix retry path — one policy.allocate (a jit'd jax
+    # dispatch for learning policies) per 0.5 s RETRY of a queued
+    # invocation, run even when the invocation is about to time out —
+    # instead of caching the Allocation in the retry payload.
+    legacy_retry_alloc: bool = False
 
 
 @dataclasses.dataclass
@@ -122,6 +141,13 @@ class Policy:
                  sim: "Simulator") -> None:
         pass
 
+    def forget(self, arrival: Arrival) -> None:
+        """Drop any per-invocation state cached by ``allocate``. Called
+        instead of ``feedback`` when the invocation times out in the
+        queue and will never run — without it, per-invocation caches
+        (e.g. feature vectors) leak for the run's lifetime."""
+        pass
+
 
 @dataclasses.dataclass
 class _Running:
@@ -157,22 +183,46 @@ class Simulator:
         self.input_pool = input_pool
         self.slo_table = slo_table
         self.rng = np.random.default_rng(self.cfg.seed)
-        self.cluster = Cluster(
-            n_workers=self.cfg.n_workers,
-            vcpus_per_worker=self.cfg.vcpus_per_worker,
-            mem_mb_per_worker=self.cfg.mem_mb_per_worker,
-            vcpu_limit=self.cfg.vcpu_limit,
-            legacy_scans=self.cfg.legacy_scans,
-        )
+        self.clusters = [
+            Cluster(
+                n_workers=self.cfg.n_workers,
+                vcpus_per_worker=self.cfg.vcpus_per_worker,
+                mem_mb_per_worker=self.cfg.mem_mb_per_worker,
+                vcpu_limit=self.cfg.vcpu_limit,
+                legacy_scans=self.cfg.legacy_scans,
+            )
+            for _ in range(self.cfg.n_clusters)
+        ]
+        # worker ids become globally unique across clusters: the
+        # simulator keys per-worker state (_worker_running) by wid.
+        # Schedulers index workers by list position, so single-cluster
+        # behavior is unchanged (wid == position for cluster 0).
+        n_total_workers = 0
+        for cl in self.clusters:
+            for w in cl.workers:
+                w.wid = n_total_workers
+                n_total_workers += 1
+        from repro.core.router import Router
         from repro.core.scheduler import ShabariScheduler
 
         placement = getattr(policy, "placement", "hashing")
         shabari_sched = getattr(policy, "uses_shabari_scheduler", True)
-        self.scheduler = ShabariScheduler(
-            self.cluster, placement=placement,
-            keep_alive_s=self.cfg.keep_alive_s, seed=self.cfg.seed,
-            route_larger=shabari_sched, background_launch=shabari_sched,
+        self.schedulers = [
+            ShabariScheduler(
+                cl, placement=placement,
+                keep_alive_s=self.cfg.keep_alive_s,
+                route_larger=shabari_sched, background_launch=shabari_sched,
+            )
+            for cl in self.clusters
+        ]
+        self.router = Router(
+            self.clusters, self.schedulers,
+            routing=self.cfg.routing, seed=self.cfg.seed,
         )
+        # single-cluster aliases (the common case, and what most tests
+        # and benchmarks reach for)
+        self.cluster = self.clusters[0]
+        self.scheduler = self.schedulers[0]
         self.store = MetadataStore()
         self.daemon = WorkerDaemon(self.store)
         self.results: List[InvocationResult] = []
@@ -183,7 +233,7 @@ class Simulator:
         # per-worker index of running invocations (dynamic-mode retiming
         # touches only the affected worker's co-runners)
         self._worker_running: List[Dict[int, _Running]] = [
-            {} for _ in self.cluster.workers
+            {} for _ in range(n_total_workers)
         ]
         self.dynamic = self.cfg.contention_mode == "dynamic"
         assert self.cfg.contention_mode in ("snapshot", "dynamic")
@@ -224,31 +274,45 @@ class Simulator:
         return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
 
     # ------------------------------------------------------------ handlers
-    def _on_arrival(self, arrival: Arrival, first_seen: float) -> None:
+    def _on_arrival(self, arrival: Arrival, first_seen: float,
+                    alloc=None) -> None:
         meta = self.input_pool[arrival.function][arrival.input_idx]
-        alloc = self.policy.allocate(arrival, meta, self)
         now = self.now
+        if self.cfg.legacy_retry_alloc:
+            # pre-fix retry path kept for A/B benchmarking (sim_bench):
+            # re-predict on every retry, even when about to time out
+            alloc = self.policy.allocate(arrival, meta, self)
         if now - first_seen > self.cfg.queue_timeout_s:
+            # the cached allocation from the first attempt is reported;
+            # a timed-out invocation never touches the policy again
+            if alloc is None:  # only reachable with queue_timeout_s <= 0
+                alloc = self.policy.allocate(arrival, meta, self)
             res = InvocationResult(
                 invocation_id=arrival.invocation_id, function=arrival.function,
                 arrival_t=first_seen, start_t=now, finish_t=now,
                 slo_s=self.slo_table[(arrival.function, arrival.input_idx)],
                 alloc_vcpus=alloc.vcpus, alloc_mem_mb=alloc.mem_mb,
-                timed_out=True,
+                queued_s=now - first_seen, timed_out=True,
             )
             self.results.append(res)
+            self.policy.forget(arrival)
             return
+        if alloc is None:
+            alloc = self.policy.allocate(arrival, meta, self)
 
-        decision = self.scheduler.schedule(arrival.function, alloc, now)
+        route = self.router.route(arrival.function, alloc, now)
+        decision = route.decision
         if decision.queued:
+            # carry the allocation: retries must not re-run the policy
             self._push(now + self.cfg.retry_interval_s, "arrival",
-                       (arrival, first_seen))
+                       (arrival, first_seen, alloc))
             return
 
+        cluster = self.clusters[route.cluster_idx]
         if decision.background_launch and decision.container is not None:
             # case 2: larger warm container used; exact size in background
             w, v, m = decision.background_launch
-            c = self.cluster.new_container(
+            c = cluster.new_container(
                 w, arrival.function, v, m, now,
                 warm_at=now + self.cold_latency(v, m),
             )
@@ -261,8 +325,8 @@ class Simulator:
             # cold start: create the container, start when warm
             w, v, m = decision.background_launch
             lat = self.cold_latency(v, m)
-            c = self.cluster.new_container(w, arrival.function, v, m, now,
-                                           warm_at=now + lat)
+            c = cluster.new_container(w, arrival.function, v, m, now,
+                                      warm_at=now + lat)
             c.busy = True
             self._note_size(arrival.function, v, m)
             self._push(now + lat, "warm_start",
@@ -375,7 +439,7 @@ class Simulator:
     # ------------------------------------------------------------ run
     def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
         for a in arrivals:
-            self._push(a.t, "arrival", (a, a.t))
+            self._push(a.t, "arrival", (a, a.t, None))
         reap_t = 60.0
         self._push(reap_t, "reap", None)
         while self._events:
@@ -383,8 +447,8 @@ class Simulator:
             self.now = t
             self.events_processed += 1
             if kind == "arrival":
-                arrival, first_seen = payload
-                self._on_arrival(arrival, first_seen)
+                arrival, first_seen, alloc = payload
+                self._on_arrival(arrival, first_seen, alloc)
             elif kind == "warm_start":
                 arrival, meta, alloc, c, lat, first_seen = payload
                 # container finished cold-starting; run the invocation
@@ -395,7 +459,8 @@ class Simulator:
                 arrival, meta, gen = payload
                 self._on_finish(arrival, meta, gen)
             elif kind == "reap":
-                self.scheduler.reap_idle(self.now)
+                for sched in self.schedulers:
+                    sched.reap_idle(self.now)
                 if self._events:
                     self._push(self.now + 60.0, "reap", None)
         return self.results

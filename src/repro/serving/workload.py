@@ -14,7 +14,9 @@ Because allocation quality flips under bursty versus steady load
 2105.14845), evaluation also needs the other load shapes a production
 FaaS sees. ``SCENARIOS`` names them: ``azure`` (the trace shape above),
 ``poisson-steady``, ``flash-crowd``, ``diurnal``, ``heavy-tail-inputs``,
-``cold-storm``, and ``oversubscribe`` (the §7.5 study). Each generator
+``cold-storm``, ``oversubscribe`` (the §7.5 study), and
+``multi-cluster`` (a hot-function surge for the front-door router,
+``repro.core.router``). Each generator
 is a pure seeded function of a :class:`ScenarioSpec`, so a (spec, seed)
 pair always yields the identical ``Arrival`` list.
 """
@@ -310,4 +312,36 @@ def _oversubscribe(spec: ScenarioSpec, functions, inputs_per_function, rng):
     mult = spec.param("load_mult", 3.0)
     pop = function_popularity(functions, rng)
     times = _poisson_times(spec.rps * mult, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("multi-cluster")
+def _multi_cluster(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Hot-spot shape for the front-door router: ``hot_frac`` of traffic
+    concentrates on ``hot_fns`` randomly-chosen functions, plus a flash
+    window at ``spike_mult`` x baseline. Hashed home clusters pin each
+    hot function's warm pool to one cluster, so its cluster saturates
+    while the others idle — the regime where spill-over routing (vs pure
+    hashing) decides SLO compliance. params: hot_fns (default 2),
+    hot_frac (default 0.7), spike_mult (default 4), spike_start_frac
+    (default 0.4), spike_duration_s (default 60)."""
+    n_hot = max(1, min(int(spec.param("hot_fns", 2)), len(functions)))
+    hot_frac = min(max(spec.param("hot_frac", 0.7), 0.0), 1.0)
+    hot = rng.choice(len(functions), size=n_hot, replace=False)
+    pop = np.full(
+        len(functions),
+        (1.0 - hot_frac) / max(len(functions) - n_hot, 1),
+    )
+    pop[hot] = hot_frac / n_hot
+    pop = pop / pop.sum()
+
+    mult = spec.param("spike_mult", 4.0)
+    t0 = spec.param("spike_start_frac", 0.4) * spec.duration_s
+    t1 = min(t0 + spec.param("spike_duration_s", 60.0), spec.duration_s)
+
+    def rate(t: np.ndarray) -> np.ndarray:
+        return np.where((t >= t0) & (t < t1), spec.rps * mult, spec.rps)
+
+    times = _thinned_times(rate, spec.rps * max(mult, 1.0), spec.duration_s,
+                           rng)
     return _assemble(times, functions, pop, inputs_per_function, rng)

@@ -106,16 +106,20 @@ def test_confidence_thresholds_gate_predictions():
     x = np.array([0.5, -0.5], np.float32)
     a = alloc.allocate("f", x)
     assert not a.predicted and a.vcpus == alloc.default_vcpus
+    assert not a.vcpu_predicted and not a.mem_predicted
     obs = _obs(1.0, 2.0, 10, 2.0, used_m=500.0)
     for i in range(3):
         alloc.feedback("f", x, obs)
     a = alloc.allocate("f", x)
-    assert a.predicted  # vCPU agent past threshold
-    # memory still at default until 6 observations (2x rule)
+    assert a.vcpu_predicted  # vCPU agent past threshold
+    # memory still at default until 6 observations (2x rule) — so the
+    # aggregate must NOT claim the allocation is predicted yet
+    assert not a.mem_predicted and not a.predicted
     assert a.mem_mb == alloc.default_mem_class * 128
     for _ in range(3):
         alloc.feedback("f", x, obs)
     a2 = alloc.allocate("f", x)
+    assert a2.mem_predicted and a2.predicted
     assert a2.mem_mb != alloc.default_mem_class * 128 or a2.mem_mb == 512
 
 
@@ -123,6 +127,12 @@ def test_memory_floor_safeguard():
     alloc = ResourceAllocator(vcpu_confidence=0, mem_confidence=1)
     x = np.array([0.0], np.float32)
     alloc.feedback("f", x, _obs(1.0, 2.0, 4, 1.0, used_m=100.0))
-    # predicted ~128-256MB, but the input object is 1 GB -> default max
+    # predicted ~128-256MB, but the input object is 1 GB -> default max,
+    # and the served memory is a default, not a prediction
     a = alloc.allocate("f", x, input_size_mb=1000.0)
     assert a.mem_mb == alloc.default_mem_class * 128
+    assert not a.mem_predicted and not a.predicted
+    assert a.vcpu_predicted  # vCPU side unaffected by the memory floor
+    # without the floor the same agent state IS a served prediction
+    b = alloc.allocate("f", x, input_size_mb=0.0)
+    assert b.mem_predicted and b.predicted

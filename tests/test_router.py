@@ -1,0 +1,204 @@
+"""Front-door router tests: home-cluster affinity, cold-start-aware
+spill-over, routing-policy behavior, and end-to-end determinism."""
+
+import pytest
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.router import Router
+from repro.core.scheduler import ShabariScheduler
+from repro.serving.experiment import run_scenario
+from repro.serving.simulator import SimConfig
+from repro.serving.workload import ScenarioSpec
+
+ALLOC = Allocation(4, 512)
+
+
+def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0):
+    clusters = [
+        Cluster(n_workers=n_workers, vcpus_per_worker=16,
+                mem_mb_per_worker=8192, vcpu_limit=16)
+        for _ in range(n_clusters)
+    ]
+    scheds = [ShabariScheduler(c) for c in clusters]
+    return clusters, Router(clusters, scheds, routing=routing, seed=seed)
+
+
+def _saturate(cluster):
+    for w in cluster.workers:
+        w.acquire(w.vcpu_limit, 0)
+
+
+# ------------------------------------------------------------- affinity
+def test_home_cluster_affinity():
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == home and not rd.spilled
+    assert rd.decision.cold_start
+    # the hash is a pure function of the name
+    assert r.home_cluster("f") == home
+
+
+def test_no_spill_while_home_has_headroom():
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    # home is loaded (but fits) and the remote is empty: locality wins
+    clusters[home].workers[0].acquire(12, 0)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == home and not rd.spilled
+
+
+def test_home_warm_container_preferred_over_remote_warm():
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    remote = 1 - home
+    c_home = clusters[home].new_container(
+        clusters[home].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    clusters[remote].new_container(
+        clusters[remote].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    rd = r.route("f", ALLOC, 1.0)
+    assert rd.cluster_idx == home and rd.decision.container is c_home
+
+
+# ------------------------------------------------------------ spill-over
+def test_remote_warm_beats_local_cold_start():
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    remote = 1 - home
+    c = clusters[remote].new_container(
+        clusters[remote].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    # home has capacity but is busier than the remote and would
+    # cold-start; the warm container on the lighter remote wins
+    clusters[home].workers[0].acquire(8, 0)
+    rd = r.route("f", ALLOC, 1.0)
+    assert rd.spilled and rd.cluster_idx == remote
+    assert rd.decision.container is c and not rd.decision.cold_start
+    assert r.spills_warm == 1
+
+
+def test_idle_home_prefers_local_pool_over_remote_warm():
+    """An idle home cluster cold-starts locally even when a remote has a
+    warm container: spilling without load pressure would smear the
+    function's warm pool across clusters."""
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    remote = 1 - home
+    clusters[remote].new_container(
+        clusters[remote].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    rd = r.route("f", ALLOC, 1.0)
+    assert rd.cluster_idx == home and not rd.spilled
+    assert rd.decision.cold_start
+
+
+def test_spill_over_picks_least_loaded_remote_when_home_saturated():
+    clusters, r = _mk(n_clusters=3)
+    home = r.home_cluster("f")
+    _saturate(clusters[home])
+    remotes = [ci for ci in range(3) if ci != home]
+    clusters[remotes[0]].workers[0].acquire(12, 0)  # more loaded remote
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.spilled and rd.cluster_idx == remotes[1]
+    assert rd.decision.cold_start and not rd.decision.queued
+    assert r.spills_cold == 1
+
+
+def test_no_spill_without_saturation_or_remote_warm():
+    clusters, r = _mk(n_clusters=3)
+    home = r.home_cluster("f")
+    rd = r.route("f", ALLOC, 0.0)  # everything empty -> home cold start
+    assert rd.cluster_idx == home and not rd.spilled
+    assert r.routed_home == 1 and r.spills_warm == 0 and r.spills_cold == 0
+
+
+def test_cold_spill_counter_attribution():
+    """A saturated home spilling onto a remote that serves a WARM
+    container counts as a warm spill, not a cold one — even when the
+    remote's load kept it out of the load-guarded warm pass."""
+    clusters, r = _mk(n_clusters=2)
+    home = r.home_cluster("f")
+    remote = 1 - home
+    _saturate(clusters[home])
+    # remote busier than home (load guard skips it) but holding a warm
+    # container on a worker with headroom
+    clusters[remote].workers[0].acquire(16, 0)
+    c = clusters[remote].new_container(
+        clusters[remote].workers[1], "f", 4, 512, now=0.0, warm_at=0.0)
+    rd = r.route("f", ALLOC, 1.0)
+    assert rd.spilled and rd.decision.container is c
+    assert r.spills_warm == 1 and r.spills_cold == 0
+
+
+def test_queued_only_when_every_cluster_saturated():
+    clusters, r = _mk(n_clusters=2)
+    for cl in clusters:
+        _saturate(cl)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.decision.queued
+    assert rd.cluster_idx == r.home_cluster("f")
+    # counters record placements only — a queued attempt is not a route
+    assert r.routed_home == r.spills_warm == r.spills_cold == 0
+
+
+# ------------------------------------------------------- other routings
+def test_hashing_routing_pins_home_even_when_saturated():
+    clusters, r = _mk(routing="hashing")
+    home = r.home_cluster("f")
+    _saturate(clusters[home])
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == home and rd.decision.queued
+
+
+def test_random_routing_deterministic_under_fixed_seed():
+    _, r1 = _mk(n_clusters=4, routing="random", seed=7)
+    _, r2 = _mk(n_clusters=4, routing="random", seed=7)
+    picks1 = [r1.route(f"f{i}", ALLOC, 0.0).cluster_idx for i in range(32)]
+    picks2 = [r2.route(f"f{i}", ALLOC, 0.0).cluster_idx for i in range(32)]
+    assert picks1 == picks2
+    assert len(set(picks1)) > 1  # actually spreads load
+    # counters account for every (non-queued) random placement too
+    assert r1.routed_home + r1.spills_warm + r1.spills_cold == 32
+    assert r1.spills_cold > 0  # ~3/4 of uniform picks land off-home
+
+
+def test_single_cluster_router_is_transparent():
+    clusters, r = _mk(n_clusters=1)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == 0 and not rd.spilled
+
+
+def test_invalid_routing_rejected():
+    clusters = [Cluster(n_workers=1)]
+    scheds = [ShabariScheduler(clusters[0])]
+    with pytest.raises(AssertionError):
+        Router(clusters, scheds, routing="round-robin")
+
+
+# ------------------------------------------------------------ end-to-end
+MULTI_CFG = dict(
+    n_workers=2, n_clusters=2, vcpus_per_worker=32, physical_cores=32,
+    mem_mb_per_worker=16 * 1024, vcpu_limit=32, seed=0,
+    retry_interval_s=1.0, queue_timeout_s=45.0,
+)
+
+
+def test_multi_cluster_simulation_deterministic_and_accounted():
+    spec = ScenarioSpec(scenario="multi-cluster", rps=2.0, duration_s=90.0,
+                        seed=5)
+    r1 = run_scenario("shabari", spec, sim_cfg=SimConfig(**MULTI_CFG),
+                      keep_results=True)
+    r2 = run_scenario("shabari", spec, sim_cfg=SimConfig(**MULTI_CFG))
+    assert r1.summary == r2.summary
+    assert r1.summary["n"] == len(r1.results)
+    for x in r1.results:
+        if not x.timed_out:
+            assert x.finish_t >= x.start_t >= x.arrival_t - 1e-9
+
+
+@pytest.mark.parametrize("routing", ["hashing", "spill-over", "random"])
+def test_routing_policies_run_and_account_all_arrivals(routing):
+    spec = ScenarioSpec(scenario="multi-cluster", rps=2.0, duration_s=60.0,
+                        seed=3)
+    cfg = SimConfig(**{**MULTI_CFG, "routing": routing})
+    res = run_scenario("shabari", spec, sim_cfg=cfg, keep_results=True)
+    assert res.summary["n"] == len(res.results) > 0
