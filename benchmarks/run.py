@@ -4,14 +4,29 @@ Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_QUICK=1 for the
 abbreviated sweep (shorter traces, fewer grid points).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig8,table3]
+
+The CI bench-regression gate (see benchmarks/README.md):
+
+  --json-out PATH       dump every emitted row as JSON (the workflow
+                        artifact, so the BENCH_*.json trajectory
+                        accumulates across runs)
+  --check-baseline      compare events/sec + SLO-violation rates against
+                        benchmarks/baselines.json; exit non-zero on a
+                        >25% events/sec regression or a missing row
+  --write-baseline      regenerate benchmarks/baselines.json from this
+                        run (intentional re-baselining; commit the diff)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+from benchmarks import util
 
 MODULES = [
     ("measurement", "benchmarks.fig_measurement_study"),
@@ -26,15 +41,95 @@ MODULES = [
     ("scenario_matrix", "benchmarks.scenario_matrix"),
     ("sim_bench", "benchmarks.sim_bench"),
     ("router_bench", "benchmarks.router_bench"),
+    ("admission_bench", "benchmarks.admission_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baselines.json")
+# >25% events/sec regression against the committed baseline fails CI
+EVENTS_PER_SEC_TOLERANCE = 0.25
+# SLO-violation drift is informational (warn only): rates move with
+# intentional semantics changes, which the golden-drift job already
+# forces to be refreshed explicitly
+SLO_WARN_PTS = 2.0
+
+
+def collect_baseline_metrics(rows):
+    """Extract the gated metrics from emitted rows.
+
+    events/sec is gated only for sim_bench rows — the designated
+    throughput harness, whose multi-second cells are stable enough to
+    compare across runs. The SLO/admission sweeps also print
+    events_per_sec, but their sub-second cells swing with machine load,
+    so they contribute only their (deterministic) SLO-violation rates.
+    """
+    events, slo = {}, {}
+    for row in rows:
+        derived = util.parse_derived(str(row["derived"]))
+        if "events_per_sec" in derived and str(row["name"]).startswith(
+                "sim_bench."):
+            events[row["name"]] = derived["events_per_sec"]
+        if "slo_viol_pct" in derived:
+            slo[row["name"]] = derived["slo_viol_pct"]
+    return {"events_per_sec": events, "slo_violation_pct": slo}
+
+
+def check_baseline(rows) -> list:
+    """Compare this run against benchmarks/baselines.json; returns a
+    list of failure strings (empty = gate passed)."""
+    if not os.path.exists(BASELINE_PATH):
+        return [f"missing {BASELINE_PATH}; run with --write-baseline first"]
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)
+    if baseline.get("bench_quick") != util.QUICK:
+        return [
+            f"baseline was captured with bench_quick={baseline.get('bench_quick')}"
+            f" but this run has bench_quick={util.QUICK}; quick and full "
+            "sweeps use different traces/fleets and are not comparable"
+        ]
+    current = collect_baseline_metrics(rows)
+    failures = []
+    for name, base_eps in sorted(baseline.get("events_per_sec", {}).items()):
+        cur_eps = current["events_per_sec"].get(name)
+        if cur_eps is None:
+            failures.append(
+                f"{name}: baselined events/sec row missing from this run")
+            continue
+        floor = base_eps * (1.0 - EVENTS_PER_SEC_TOLERANCE)
+        status = "FAIL" if cur_eps < floor else "ok"
+        print(f"# baseline {status}: {name} events/sec "
+              f"{cur_eps:.0f} vs {base_eps:.0f} (floor {floor:.0f})",
+              file=sys.stderr)
+        if cur_eps < floor:
+            failures.append(
+                f"{name}: events/sec regressed >25% "
+                f"({cur_eps:.0f} < floor {floor:.0f}, baseline {base_eps:.0f})")
+    for name, base_slo in sorted(baseline.get("slo_violation_pct", {}).items()):
+        cur_slo = current["slo_violation_pct"].get(name)
+        if cur_slo is None:
+            # SLO rows are informational; a subset run (--only) simply
+            # doesn't produce them all
+            continue
+        if abs(cur_slo - base_slo) > SLO_WARN_PTS:
+            print(f"# baseline WARN: {name} slo_viol_pct moved "
+                  f"{base_slo:.2f} -> {cur_slo:.2f} "
+                  "(informational; refresh with --write-baseline if intended)",
+                  file=sys.stderr)
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of module keys")
+    ap.add_argument("--json-out", default=None,
+                    help="write every emitted row to this JSON file")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail on >25%% events/sec regression vs "
+                         "benchmarks/baselines.json")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate benchmarks/baselines.json from this run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -51,8 +146,43 @@ def main() -> None:
         except Exception as e:
             failures.append((key, repr(e)))
             traceback.print_exc()
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"bench_quick": util.QUICK, "rows": util.ROWS},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(util.ROWS)} rows to {args.json_out}",
+              file=sys.stderr)
+    if args.write_baseline:
+        # merge into the existing baseline so a subset re-baseline
+        # (--only sim_bench) can't silently delete every other gate;
+        # a mode switch (quick vs full) starts fresh — the two sweeps
+        # use different traces/fleets and must never mix
+        doc = {"events_per_sec": {}, "slo_violation_pct": {}}
+        if os.path.exists(BASELINE_PATH):
+            with open(BASELINE_PATH) as f:
+                prior = json.load(f)
+            if prior.get("bench_quick") == util.QUICK:
+                doc.update(prior)
+            else:
+                print("# baseline mode changed; starting fresh",
+                      file=sys.stderr)
+        current = collect_baseline_metrics(util.ROWS)
+        doc["bench_quick"] = util.QUICK
+        doc["events_per_sec"].update(current["events_per_sec"])
+        doc["slo_violation_pct"].update(current["slo_violation_pct"])
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote baseline to {BASELINE_PATH}", file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
+    if args.check_baseline:
+        gate = check_baseline(util.ROWS)
+        if gate:
+            raise SystemExit(
+                "bench-regression gate failed:\n  " + "\n  ".join(gate))
 
 
 if __name__ == "__main__":

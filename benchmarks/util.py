@@ -1,19 +1,46 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission + timing.
+
+Every ``emit`` call is also recorded in ``ROWS`` so ``benchmarks.run``
+can dump the whole sweep as JSON (the CI workflow artifact) and check
+it against ``benchmarks/baselines.json`` (the bench-regression gate).
+"""
 
 from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Iterable, List
+from typing import Callable, Dict, Iterable, List
 
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 
+# every emitted row of the current process, in emission order
+ROWS: List[Dict[str, object]] = []
+
 
 def emit(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(
+        {"name": name, "us_per_call": us_per_call, "derived": derived}
+    )
     print(line)
     return line
+
+
+def parse_derived(derived: str) -> Dict[str, float]:
+    """Parse an emit row's ``key=value|key=value`` derived field,
+    keeping only the numeric values (the machine-readable metrics the
+    baseline gate compares)."""
+    out: Dict[str, float] = {}
+    for part in derived.split("|"):
+        key, sep, value = part.partition("=")
+        if not sep:
+            continue
+        try:
+            out[key] = float(value)
+        except ValueError:
+            continue
+    return out
 
 
 def time_us(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:

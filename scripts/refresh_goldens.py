@@ -2,42 +2,84 @@
 
 Run this ONLY when a PR intentionally changes simulated behavior
 (allocator, scheduler, workload, simulator); commit the diff so the
-review shows exactly which metrics moved and by how much.
+review shows exactly which metrics moved and by how much. The CI
+golden-drift job reruns this script and fails on any uncommitted diff,
+so a semantics change can't sail through on stale snapshots.
 
-    PYTHONPATH=src python scripts/refresh_goldens.py
+    PYTHONPATH=src python scripts/refresh_goldens.py [--only a,b]
+                                                     [--out-dir DIR]
+
+Besides the per-scenario snapshots, the acquire-on-placement A/B
+scenarios (``LEGACY_ACQUIRE_SCENARIOS``) are snapshotted a second time
+under ``<out-dir>/legacy-acquire/`` with ``SimConfig(legacy_acquire=
+True)``, pinning the pre-reservation accounting independently.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
 import sys
+from typing import Dict, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.serving.golden import GOLDEN_POLICY, golden_specs, run_golden  # noqa: E402
+from repro.serving.golden import (  # noqa: E402
+    GOLDEN_POLICY,
+    LEGACY_ACQUIRE_SCENARIOS,
+    golden_specs,
+    run_golden,
+)
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens")
+LEGACY_SUBDIR = "legacy-acquire"
 
 
-def main() -> None:
-    os.makedirs(GOLDEN_DIR, exist_ok=True)
-    for scenario, spec in sorted(golden_specs().items()):
-        summary = run_golden(scenario)
-        path = os.path.join(GOLDEN_DIR, f"{scenario}.json")
-        with open(path, "w") as f:
-            json.dump(
-                {
-                    "policy": GOLDEN_POLICY,
-                    "spec": dataclasses.asdict(spec),
-                    "summary": summary,
-                },
-                f, indent=2, sort_keys=True,
-            )
-            f.write("\n")
-        print(f"{scenario:>20}: n={summary['n']:.0f} "
-              f"slo_viol={summary['slo_violation_pct']:.2f}% -> {path}")
+def write_snapshot(scenario: str, out_dir: str, *,
+                   legacy_acquire: bool = False) -> Dict:
+    """Run one golden scenario and write its snapshot JSON; returns the
+    written document (the schema tests/test_refresh_goldens.py pins)."""
+    os.makedirs(out_dir, exist_ok=True)
+    doc = {
+        "policy": GOLDEN_POLICY,
+        "spec": dataclasses.asdict(golden_specs()[scenario]),
+        "summary": run_golden(scenario, legacy_acquire=legacy_acquire),
+    }
+    path = os.path.join(out_dir, f"{scenario}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    tag = " (legacy-acquire)" if legacy_acquire else ""
+    print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
+          f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
+    return doc
+
+
+def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
+    for scenario in sorted(golden_specs()):
+        if only and scenario not in only:
+            continue
+        write_snapshot(scenario, out_dir)
+        if scenario in LEGACY_ACQUIRE_SCENARIOS:
+            write_snapshot(scenario, os.path.join(out_dir, LEGACY_SUBDIR),
+                           legacy_acquire=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of scenarios")
+    ap.add_argument("--out-dir", default=GOLDEN_DIR,
+                    help="write snapshots here instead of tests/goldens/")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(golden_specs())
+        if unknown:
+            raise SystemExit(f"unknown scenarios: {sorted(unknown)}")
+    refresh(args.out_dir, only)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,13 @@ the paper's safeguards:
   until then a large default allocation lets the agent learn safely;
 * memory floor — the predicted allocation is never below the input
   object size; otherwise the default maximum is used (§4.3.2).
+
+The predicted (vcpus, mem) is also the RESERVATION footprint: under
+acquire-on-placement (``repro.core.cluster``) a cold-started invocation
+holds exactly this allocation from placement through warm-up, so
+over-prediction now costs admission headroom (``Router._load``) for the
+whole cold-start window, not just execution-time waste — one more
+reason the cost functions penalize over-allocation.
 """
 
 from __future__ import annotations

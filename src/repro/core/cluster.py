@@ -8,7 +8,15 @@ under static-large, Figure 8a).
 
 Containers are (function, vcpus, mem) slots. Idle warm containers hold
 no load (§5 "while idle, containers do not consume vCPU or memory") —
-only RUNNING invocations count against worker capacity.
+worker capacity is consumed by RUNNING invocations plus WARMING
+reservations: when the scheduler places an invocation that needs a cold
+container, the worker reserves its vCPUs/memory immediately
+(:meth:`Worker.reserve`), so ``fits`` and the cluster-level load
+aggregates see committed-but-still-warming capacity instead of letting
+the router stack cold starts onto a free-looking worker. A reservation
+either converts to a running acquisition when the cold start completes
+(:meth:`Worker.commit_reservation`) or is released on timeout/cancel
+(:meth:`Worker.cancel_reservation`).
 """
 
 from __future__ import annotations
@@ -31,6 +39,9 @@ class Container:
     created_at: float = 0.0
     last_used: float = 0.0
     warm_at: float = 0.0  # when the cold start finishes
+    # True while the container is warming WITH an invocation committed
+    # to it and its (vcpus, mem) held as a reservation on the worker
+    reserved: bool = False
 
     def size_key(self) -> Tuple[int, int]:
         return (self.vcpus, self.mem_mb)
@@ -45,6 +56,12 @@ class Worker:
     vcpu_limit: int = 90
     used_vcpus: int = 0
     used_mem_mb: int = 0
+    # the committed-but-warming slice of used_vcpus/used_mem_mb:
+    # reservations are COUNTED inside the used_* totals (so ``fits`` and
+    # the cluster aggregates need no special cases); these track how
+    # much of that total is reservations, for observability and tests
+    reserved_vcpus: int = 0
+    reserved_mem_mb: int = 0
     # owning-cluster backref so acquire/release can maintain the
     # cluster-level load aggregates (None for standalone Workers)
     cluster: Optional["Cluster"] = dataclasses.field(default=None, repr=False)
@@ -83,6 +100,34 @@ class Worker:
             self.cluster.used_vcpus -= vcpus
             self.cluster.used_mem_mb -= mem_mb
 
+    # -------------------------------------------- warming reservations
+    def reserve(self, vcpus: int, mem_mb: int) -> None:
+        """Acquire-on-placement: hold capacity for a cold start the
+        moment it is placed, before the container finishes warming."""
+        self.reserved_vcpus += vcpus
+        self.reserved_mem_mb += mem_mb
+        if self.cluster is not None:
+            self.cluster.reserved_vcpus += vcpus
+            self.cluster.reserved_mem_mb += mem_mb
+        self.acquire(vcpus, mem_mb)
+
+    def commit_reservation(self, vcpus: int, mem_mb: int) -> None:
+        """Cold start completed: the reservation becomes a running
+        acquisition. used_* already count it, so only the reserved
+        slice shrinks."""
+        self.reserved_vcpus -= vcpus
+        self.reserved_mem_mb -= mem_mb
+        assert self.reserved_vcpus >= 0 and self.reserved_mem_mb >= 0
+        if self.cluster is not None:
+            self.cluster.reserved_vcpus -= vcpus
+            self.cluster.reserved_mem_mb -= mem_mb
+
+    def cancel_reservation(self, vcpus: int, mem_mb: int) -> None:
+        """The committed invocation will never run (queue timeout /
+        cancel): give the capacity back."""
+        self.commit_reservation(vcpus, mem_mb)
+        self.release(vcpus, mem_mb)
+
     def add_active(self, demand_vcpus: float, net_gbps: float) -> None:
         self.active_demand_vcpus += demand_vcpus
         self.active_net_gbps += net_gbps
@@ -118,9 +163,13 @@ class Cluster:
         # benchmarking; results are identical either way.
         self.legacy_scans = legacy_scans
         # cluster-level load aggregates, maintained by Worker.acquire/
-        # release — the router's O(1) spill-target metric
+        # release — the router's O(1) spill-target metric. Reservations
+        # (committed-but-warming cold starts) are included in used_*;
+        # reserved_* track that slice separately.
         self.used_vcpus = 0
         self.used_mem_mb = 0
+        self.reserved_vcpus = 0
+        self.reserved_mem_mb = 0
         self.workers = [
             Worker(
                 wid=i,

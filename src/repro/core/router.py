@@ -21,13 +21,20 @@ same cold-start-aware philosophy as Shabari's scheduler, one level up:
 is itself side-effect-free: like ``schedule``, it only inspects state,
 so the runtime remains the sole owner of load mutation.
 
-Known limitation (inherited from the simulator's load accounting, where
-it predates the router): a cold-started container holds no load until
-its warm-up completes, so arrivals inside that ~0.5-1 s window see an
-unchanged cluster load and can herd onto the same least-loaded remote.
-The fix — reserving capacity at placement rather than at start, for
-both ``Worker.fits`` and ``_load`` — is a ROADMAP follow-on because it
-changes admission semantics (and every golden) across the whole stack.
+The ``_load`` signal is truthful about in-flight cold starts: the
+runtime reserves capacity at PLACEMENT (``Worker.reserve``), so a
+cold-started container counts against its cluster's load for the whole
+warm-up window and arrivals inside that ~0.5-1 s window no longer herd
+onto the same least-loaded remote (the old acquire-on-start behavior is
+kept behind ``SimConfig(legacy_acquire=True)`` for A/B).
+
+On top of that signal the router applies fleet-wide ADMISSION CONTROL:
+when every cluster's committed load (running + reserved) exceeds the
+``admission_headroom`` occupancy fraction, new arrivals are either shed
+at the front door (``admission="shed"``) or held in the front-door
+queue without probing any scheduler (``admission="queue"``); the
+default ``admission="none"`` admits everything and lets per-cluster
+queueing absorb overload, as before.
 """
 
 from __future__ import annotations
@@ -42,6 +49,7 @@ from repro.core.cluster import Cluster
 from repro.core.scheduler import Decision, ShabariScheduler
 
 ROUTING_POLICIES = ("hashing", "spill-over", "random")
+ADMISSION_POLICIES = ("none", "shed", "queue")
 
 
 @dataclasses.dataclass
@@ -49,6 +57,7 @@ class RouteDecision:
     cluster_idx: int
     decision: Decision
     spilled: bool = False  # placed off the function's home cluster
+    shed: bool = False  # rejected by fleet-wide admission control
 
 
 class Router:
@@ -59,8 +68,12 @@ class Router:
         *,
         routing: str = "spill-over",
         seed: int = 0,
+        admission: str = "none",
+        admission_headroom: float = 0.95,
     ):
         assert routing in ROUTING_POLICIES, routing
+        assert admission in ADMISSION_POLICIES, admission
+        assert 0.0 < admission_headroom <= 1.0 or admission == "none"
         assert len(clusters) == len(schedulers) > 0
         # route() composes schedulers[i] decisions with clusters[i]
         # load/warm-pool inspection; a mispaired zip would silently
@@ -71,16 +84,23 @@ class Router:
         self.clusters: List[Cluster] = list(clusters)
         self.schedulers: List[ShabariScheduler] = list(schedulers)
         self.routing = routing
+        self.admission = admission
+        self.admission_headroom = admission_headroom
         self._rng = random.Random(seed)
         # per-cluster vCPU capacity is fixed for the cluster's lifetime
         self._capacity = [
             max(sum(w.vcpu_limit for w in cl.workers), 1)
             for cl in self.clusters
         ]
-        # observability counters (benchmarks/router_bench)
+        # observability counters (benchmarks/router_bench + admission_bench)
         self.routed_home = 0
         self.spills_warm = 0  # remote warm container beat a local cold start
         self.spills_cold = 0  # home saturated; cold-started remotely
+        self.admission_shed = 0  # arrivals rejected at the front door
+        # queue-mode rejections count EVENTS, not arrivals: a held
+        # arrival re-enters route() on every retry and increments this
+        # each time (the router cannot tell a retry from a new arrival)
+        self.admission_queue_events = 0
 
     # ------------------------------------------------------------ utils
     def home_cluster(self, function: str) -> int:
@@ -93,14 +113,38 @@ class Router:
         return h % len(self.clusters)
 
     def _load(self, ci: int) -> float:
-        """vCPU occupancy fraction — the spill-over target metric.
-        O(1): the cluster maintains its load aggregate on acquire/
-        release, so retry storms don't rescan workers per route."""
+        """Committed vCPU occupancy fraction — the spill-over target and
+        admission-control metric. Includes warming reservations (the
+        cluster's used_vcpus count them), so in-flight cold starts are
+        visible the moment they are placed. O(1): the cluster maintains
+        its load aggregate on acquire/release/reserve, so retry storms
+        don't rescan workers per route."""
         return self.clusters[ci].used_vcpus / self._capacity[ci]
+
+    def _admission_reject(self) -> bool:
+        """Fleet-wide overload test: every cluster's committed load
+        (running + warming reservations) is past the headroom fraction.
+        One under-headroom cluster is enough to admit — per-cluster
+        saturation is the schedulers' business, not the front door's."""
+        if self.admission == "none":
+            return False
+        return all(
+            self._load(ci) >= self.admission_headroom
+            for ci in range(len(self.clusters))
+        )
 
     # ------------------------------------------------------------ route
     def route(self, function: str, alloc: Allocation, now: float) -> RouteDecision:
         n = len(self.clusters)
+        if self._admission_reject():
+            home = 0 if n == 1 else self.home_cluster(function)
+            rejected = Decision(None, cold_start=False, background_launch=None,
+                                queued=True)
+            if self.admission == "shed":
+                self.admission_shed += 1
+                return RouteDecision(home, rejected, shed=True)
+            self.admission_queue_events += 1  # queue-at-front-door: retry later
+            return RouteDecision(home, rejected)
         if n == 1:
             d = self.schedulers[0].schedule(function, alloc, now)
             if not d.queued:

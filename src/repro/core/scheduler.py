@@ -18,7 +18,12 @@ network-hungry invocations saturates the server.
 
 Load accounting uses BOTH vCPU and memory per worker (OpenWhisk's
 memory-only policy is what oversubscribes vCPUs, §5 reason 3), with the
-``userCPU`` oversubscription limit from §6.
+``userCPU`` oversubscription limit from §6. ``Worker.fits`` counts
+committed-but-warming reservations (acquire-on-placement,
+``repro.core.cluster``), so the cold-placement walk skips workers whose
+capacity is already promised to in-flight cold starts instead of
+stacking onto them; warming containers are ``busy`` and therefore never
+candidates for the warm-routing cases (1)/(2).
 """
 
 from __future__ import annotations

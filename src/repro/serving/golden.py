@@ -30,6 +30,12 @@ GOLDEN_POLICY = "shabari"
 RTOL = 1e-5
 ATOL = 1e-8
 
+# The acquire-on-placement A/B: these scenarios are also snapshotted
+# under tests/goldens/legacy-acquire/ with SimConfig(legacy_acquire=
+# True), pinning the pre-reservation accounting so the two semantics
+# stay independently regression-tested (tests/test_reservation.py).
+LEGACY_ACQUIRE_SCENARIOS = ("multi-cluster", "oversubscribe", "poisson-steady")
+
 
 # per-scenario SimConfig overrides: multi-cluster splits the same
 # 4-worker footprint into 2 clusters x 2 workers behind the spill-over
@@ -77,8 +83,9 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
     }
 
 
-def run_golden(scenario: str) -> Dict[str, float]:
+def run_golden(scenario: str, *, legacy_acquire: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
-    return run_scenario(
-        GOLDEN_POLICY, spec, sim_cfg=golden_sim_config(scenario)
-    ).summary
+    cfg = golden_sim_config(scenario)
+    if legacy_acquire:
+        cfg = dataclasses.replace(cfg, legacy_acquire=True)
+    return run_scenario(GOLDEN_POLICY, spec, sim_cfg=cfg).summary

@@ -24,6 +24,13 @@ and contention. Modeled effects, each tied to a paper observation:
 ``SimConfig(n_clusters=N)`` scales the testbed to N such clusters
 behind a front-door :class:`repro.core.router.Router` (home-cluster
 hashing + cold-start-aware spill-over; ``routing`` picks the policy).
+
+Resource lifecycle: capacity is acquired at PLACEMENT, not at start — a
+placed cold start reserves its container's (vcpus, mem) for the whole
+warm-up window, so ``Worker.fits`` and ``Router._load`` see committed-
+but-warming capacity (``SimConfig.legacy_acquire`` restores the old
+acquire-on-start accounting for A/B). ``SimConfig.admission`` adds
+front-door admission control (shed / queue) under fleet-wide overload.
 """
 
 from __future__ import annotations
@@ -92,6 +99,25 @@ class SimConfig:
     # invocation, run even when the invocation is about to time out —
     # instead of caching the Allocation in the retry payload.
     legacy_retry_alloc: bool = False
+    # Resource lifecycle (benchmarks/admission_bench A/B). Default is
+    # acquire-on-PLACEMENT: a cold-started invocation reserves its
+    # container's (vcpus, mem) the moment it is placed, so Worker.fits,
+    # the per-worker aggregates, and Router._load all see committed-but-
+    # warming capacity; the reservation converts to a running
+    # acquisition when the cold start completes and is released if the
+    # invocation's queue timeout lapses first. legacy_acquire=True
+    # restores acquire-on-START (capacity held only once the container
+    # is warm), under which arrivals inside the warm-up window see a
+    # free-looking worker and stack cold starts onto it.
+    legacy_acquire: bool = False
+    # Router-level admission control under fleet-wide overload: when
+    # EVERY cluster's committed load exceeds admission_headroom,
+    # "shed" drops the arrival at the front door (recorded as a shed
+    # result, an SLO violation), "queue" holds it in the front-door
+    # retry queue without probing any scheduler, and "none" (default)
+    # admits everything, as before.
+    admission: str = "none"
+    admission_headroom: float = 0.95
 
 
 @dataclasses.dataclass
@@ -112,10 +138,11 @@ class InvocationResult:
     queued_s: float = 0.0
     oom_killed: bool = False
     timed_out: bool = False
+    shed: bool = False  # rejected by router admission control
 
     @property
     def slo_violated(self) -> bool:
-        if self.timed_out or self.oom_killed:
+        if self.timed_out or self.oom_killed or self.shed:
             return True
         return (self.finish_t - self.arrival_t) > self.slo_s + 1e-9
 
@@ -218,6 +245,8 @@ class Simulator:
         self.router = Router(
             self.clusters, self.schedulers,
             routing=self.cfg.routing, seed=self.cfg.seed,
+            admission=self.cfg.admission,
+            admission_headroom=self.cfg.admission_headroom,
         )
         # single-cluster aliases (the common case, and what most tests
         # and benchmarks reach for)
@@ -274,6 +303,23 @@ class Simulator:
         return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
 
     # ------------------------------------------------------------ handlers
+    def _record_terminal(self, arrival: Arrival, alloc, first_seen: float,
+                         *, timed_out: bool = False,
+                         shed: bool = False) -> None:
+        """Record an invocation that will never run (queue timeout,
+        front-door shed, cancelled cold start) and drop the policy's
+        per-invocation state."""
+        now = self.now
+        res = InvocationResult(
+            invocation_id=arrival.invocation_id, function=arrival.function,
+            arrival_t=first_seen, start_t=now, finish_t=now,
+            slo_s=self.slo_table[(arrival.function, arrival.input_idx)],
+            alloc_vcpus=alloc.vcpus, alloc_mem_mb=alloc.mem_mb,
+            queued_s=now - first_seen, timed_out=timed_out, shed=shed,
+        )
+        self.results.append(res)
+        self.policy.forget(arrival)
+
     def _on_arrival(self, arrival: Arrival, first_seen: float,
                     alloc=None) -> None:
         meta = self.input_pool[arrival.function][arrival.input_idx]
@@ -287,23 +333,20 @@ class Simulator:
             # a timed-out invocation never touches the policy again
             if alloc is None:  # only reachable with queue_timeout_s <= 0
                 alloc = self.policy.allocate(arrival, meta, self)
-            res = InvocationResult(
-                invocation_id=arrival.invocation_id, function=arrival.function,
-                arrival_t=first_seen, start_t=now, finish_t=now,
-                slo_s=self.slo_table[(arrival.function, arrival.input_idx)],
-                alloc_vcpus=alloc.vcpus, alloc_mem_mb=alloc.mem_mb,
-                queued_s=now - first_seen, timed_out=True,
-            )
-            self.results.append(res)
-            self.policy.forget(arrival)
+            self._record_terminal(arrival, alloc, first_seen, timed_out=True)
             return
         if alloc is None:
             alloc = self.policy.allocate(arrival, meta, self)
 
         route = self.router.route(arrival.function, alloc, now)
         decision = route.decision
+        if route.shed:
+            # admission control dropped it at the front door: no retry
+            self._record_terminal(arrival, alloc, first_seen, shed=True)
+            return
         if decision.queued:
             # carry the allocation: retries must not re-run the policy
+            # (front-door admission queueing lands here too)
             self._push(now + self.cfg.retry_interval_s, "arrival",
                        (arrival, first_seen, alloc))
             return
@@ -328,12 +371,30 @@ class Simulator:
             c = cluster.new_container(w, arrival.function, v, m, now,
                                       warm_at=now + lat)
             c.busy = True
+            if not self.cfg.legacy_acquire:
+                # acquire-on-placement: hold the capacity for the whole
+                # warm-up window (converted to a running acquisition in
+                # _start, released in _cancel_cold_start)
+                w.reserve(v, m)
+                c.reserved = True
             self._note_size(arrival.function, v, m)
             self._push(now + lat, "warm_start",
                        (arrival, meta, alloc, c, lat, first_seen))
 
     def _note_size(self, fn: str, v: int, m: int) -> None:
         self.container_sizes.setdefault(fn, set()).add((v, m))
+
+    def _cancel_cold_start(self, arrival: Arrival, alloc, c: Container,
+                           first_seen: float) -> None:
+        """The cold start outlived the invocation's queue timeout:
+        release the reservation and record the timeout. The container
+        itself survives as an idle warm container — the capacity was
+        spent warming it, so future invocations may as well reuse it."""
+        c.reserved = False
+        c.busy = False
+        c.last_used = self.now
+        c.worker.cancel_reservation(c.vcpus, c.mem_mb)
+        self._record_terminal(arrival, alloc, first_seen, timed_out=True)
 
     def _start(self, arrival, meta, alloc, container: Container, *, cold: bool,
                first_seen: float, cold_latency: float = 0.0) -> None:
@@ -343,7 +404,13 @@ class Simulator:
         w = container.worker
         container.busy = True
         container.last_used = now
-        w.acquire(container.vcpus, container.mem_mb)
+        if container.reserved:
+            # acquire-on-placement: the capacity was reserved when the
+            # cold start was placed; convert it instead of re-acquiring
+            container.reserved = False
+            w.commit_reservation(container.vcpus, container.mem_mb)
+        else:
+            w.acquire(container.vcpus, container.mem_mb)
 
         # the invocation runs with the CONTAINER's size (may exceed request)
         vcpus = container.vcpus
@@ -451,10 +518,17 @@ class Simulator:
                 self._on_arrival(arrival, first_seen, alloc)
             elif kind == "warm_start":
                 arrival, meta, alloc, c, lat, first_seen = payload
-                # container finished cold-starting; run the invocation
-                c.busy = False  # _start re-marks busy + acquires load
-                self._start(arrival, meta, alloc, c, cold=True,
-                            first_seen=first_seen, cold_latency=lat)
+                if c.reserved and t - first_seen > self.cfg.queue_timeout_s:
+                    # reservation outlived the queue timeout (only
+                    # possible when cold latency > remaining budget)
+                    self._cancel_cold_start(arrival, alloc, c, first_seen)
+                else:
+                    # container finished cold-starting; run the
+                    # invocation (_start re-marks busy + commits the
+                    # reservation / acquires load)
+                    c.busy = False
+                    self._start(arrival, meta, alloc, c, cold=True,
+                                first_seen=first_seen, cold_latency=lat)
             elif kind == "finish":
                 arrival, meta, gen = payload
                 self._on_finish(arrival, meta, gen)
@@ -500,4 +574,5 @@ def summarize(results: List[InvocationResult]) -> Dict[str, float]:
         ),
         "oom_pct": 100.0 * len([r for r in results if r.oom_killed]) / len(results),
         "timeout_pct": 100.0 * len([r for r in results if r.timed_out]) / len(results),
+        "shed_pct": 100.0 * len([r for r in results if r.shed]) / len(results),
     }

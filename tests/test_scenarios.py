@@ -134,7 +134,13 @@ def test_dynamic_contention_mode():
     every arrival, and keep result invariants intact."""
     spec = ScenarioSpec(scenario="flash-crowd", rps=2.0, duration_s=90.0,
                         seed=0)
-    cfg = SimConfig(**SMALL_CFG, contention_mode="dynamic")
+    # vcpu_limit > physical_cores (the §6 userCPU knob): co-runner
+    # demand must be able to exceed the cores for contention to exist
+    # at all. With acquire-on-placement accounting, fits() caps
+    # committed vCPUs at vcpu_limit, so at vcpu_limit == cores no
+    # worker ever runs contended and dynamic == snapshot trivially.
+    over_cfg = {**SMALL_CFG, "vcpu_limit": 44}
+    cfg = SimConfig(**over_cfg, contention_mode="dynamic")
     r1 = run_scenario("shabari", spec, sim_cfg=cfg, keep_results=True)
     r2 = run_scenario("shabari", spec, sim_cfg=cfg)
     assert r1.summary == r2.summary
@@ -145,7 +151,7 @@ def test_dynamic_contention_mode():
             assert abs((x.finish_t - x.start_t) - x.exec_s) < 1e-6
     # and it actually differs from the snapshot semantics
     snap = run_scenario(
-        "shabari", spec, sim_cfg=SimConfig(**SMALL_CFG)).summary
+        "shabari", spec, sim_cfg=SimConfig(**over_cfg)).summary
     assert r1.summary != snap
 
 
