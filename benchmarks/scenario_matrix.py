@@ -1,15 +1,22 @@
-"""Every policy x every scenario — the evaluation grid.
+"""Every policy x every scenario x an RPS sweep — the violation surface.
 
 The paper's Figure 8 compares policies at one load shape (the Azure
-trace). Allocation quality flips under bursty versus steady load
-(Fifer, arXiv 2008.12819), so this matrix runs each policy against all
-registered scenarios: azure, poisson-steady, flash-crowd, diurnal,
-heavy-tail-inputs, cold-storm, oversubscribe, and multi-cluster (run
-here on the default single-cluster testbed — its workload shape alone;
-the routing layer it targets is swept in benchmarks/router_bench.py).
+trace) across arrival rates. Allocation quality flips under bursty
+versus steady load (Fifer, arXiv 2008.12819), so this matrix runs each
+policy against all registered scenarios — azure, poisson-steady,
+flash-crowd, diurnal, heavy-tail-inputs, cold-storm, oversubscribe, and
+multi-cluster (run here on the default single-cluster testbed — its
+workload shape alone; the routing layer it targets is swept in
+benchmarks/router_bench.py) — and, fig8-style, sweeps the offered RPS
+per cell. The emitted rows form a violation SURFACE (scenario x policy
+x rps -> SLO-violation / cold-start / timeout / waste rates);
+``benchmarks/run.py --json-out`` dumps them for plotting, and the
+learning-policy cells are what the agent arena made affordable (the
+shabari column alone was ~3.5x slower before it).
 
-Rows: ``scenario_matrix.<scenario>.<policy>,<wall_us>,<metrics>``.
-Set BENCH_QUICK=1 for a reduced grid (3 policies, shorter traces).
+Rows: ``scenario_matrix.<scenario>.<policy>.rps<r>,<wall_us>,<metrics>``.
+Set BENCH_QUICK=1 for a reduced grid (3 policies, 2 rates, shorter
+traces).
 
   PYTHONPATH=src python -m benchmarks.scenario_matrix
 """
@@ -18,38 +25,37 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.util import QUICK, duration_s, emit
+from benchmarks.util import QUICK, duration_s, emit, rps_list
 from repro.serving.experiment import POLICIES, run_scenario
 from repro.serving.workload import ScenarioSpec, list_scenarios
 
 QUICK_POLICIES = ("shabari", "parrotfish", "static-medium")
 
-RPS = 4.0
-
 
 def run() -> None:
     policies = QUICK_POLICIES if QUICK else POLICIES
     for scenario in list_scenarios():
-        spec = ScenarioSpec(
-            scenario=scenario, rps=RPS, duration_s=duration_s(), seed=0,
-        )
-        for pol in policies:
-            t0 = time.perf_counter()
-            r = run_scenario(pol, spec)
-            wall = time.perf_counter() - t0
-            s = r.summary
-            emit(
-                f"scenario_matrix.{scenario}.{pol}",
-                wall * 1e6,
-                "|".join([
-                    f"n={s['n']:.0f}",
-                    f"slo_viol_pct={s['slo_violation_pct']:.2f}",
-                    f"cold_pct={s['cold_start_pct']:.2f}",
-                    f"wasted_mem_p50={s['wasted_mem_mb_p50']:.0f}",
-                    f"timeout_pct={s['timeout_pct']:.2f}",
-                    f"oom_pct={s['oom_pct']:.2f}",
-                ]),
+        for rps in rps_list():
+            spec = ScenarioSpec(
+                scenario=scenario, rps=rps, duration_s=duration_s(), seed=0,
             )
+            for pol in policies:
+                t0 = time.perf_counter()
+                r = run_scenario(pol, spec)
+                wall = time.perf_counter() - t0
+                s = r.summary
+                emit(
+                    f"scenario_matrix.{scenario}.{pol}.rps{rps:g}",
+                    wall * 1e6,
+                    "|".join([
+                        f"n={s['n']:.0f}",
+                        f"slo_viol_pct={s['slo_violation_pct']:.2f}",
+                        f"cold_pct={s['cold_start_pct']:.2f}",
+                        f"wasted_mem_p50={s['wasted_mem_mb_p50']:.0f}",
+                        f"timeout_pct={s['timeout_pct']:.2f}",
+                        f"oom_pct={s['oom_pct']:.2f}",
+                    ]),
+                )
 
 
 if __name__ == "__main__":

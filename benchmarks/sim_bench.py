@@ -1,6 +1,6 @@
 """Simulator-core throughput: events/sec on a 10k-invocation trace.
 
-Two A/Bs, each against a pre-fix path kept behind a SimConfig switch:
+Three A/Bs, each against a pre-fix path kept behind a config switch:
 
 * ``legacy_scans`` — the incremental simulator core (per-worker
   contention aggregates + per-function warm-container index) vs the
@@ -18,7 +18,18 @@ Two A/Bs, each against a pre-fix path kept behind a SimConfig switch:
   deterministic-allocation policies the fix is metric-neutral even
   under saturation (same allocation on every retry), which the bench
   asserts with static-large; for learning policies only QUEUED
-  invocations can change (they now keep their first prediction).
+  invocations can change (they now keep their first prediction). Note
+  the legacy leg re-runs only the PREDICT per retry — the featurized
+  input rides the retry payload either way — so the ratio isolates the
+  dispatch cost the fix removed.
+
+* allocator engine — the batched agent arena
+  (``ResourceAllocator(engine="arena")``, see repro.core.agent_arena)
+  vs the per-function-object path (``engine="legacy"``: two jit'd JAX
+  dispatches per allocate and two per feedback) with the SHABARI
+  policy on the same heavy-tail trace as the scans A/B. This is the
+  learning-path throughput gate: the arena must be ≥3x events/sec AND
+  bit-identical in summary metrics (enforced here, not just printed).
 
   PYTHONPATH=src python -m benchmarks.sim_bench
 """
@@ -40,19 +51,65 @@ SCENARIO = "heavy-tail-inputs"
 POLICY = "static-large"
 
 
-def _run_once(trace, profiles, pool, slo_table, *, legacy: bool):
+def _run_once(trace, profiles, pool, slo_table, *, legacy: bool,
+              policy: str = POLICY):
     # uncapped worker resources: every invocation is admitted, so the
     # event count is pure start/finish work and the running set grows to
     # the hundreds (retry storms would otherwise dominate both sides)
     cfg = SimConfig(seed=0, vcpu_limit=100_000,
                     mem_mb_per_worker=4_000_000, legacy_scans=legacy)
-    policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
-    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+    pol = make_policy(policy, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
                     slo_table=slo_table, cfg=cfg)
     t0 = time.perf_counter()
     results = sim.run(trace)
     wall = time.perf_counter() - t0
     return sim.events_processed, wall, summarize(results)
+
+
+# --------------------------------------------------- allocator-engine A/B
+def run_engine_ab(trace, profiles, pool, slo_table) -> None:
+    """Shabari (learning) policy: agent arena vs per-object agents.
+
+    Hard gates, mirroring the scans A/B's metrics_identical check:
+    summary metrics must be BIT-identical (the arena is a pure fast
+    path — its NumPy backend is calibrated against the jit kernels and
+    its flush ordering reproduces the sequential update/predict
+    interleaving), and the arena must clear 3x events/sec."""
+    # throwaway warm-up: run the arena's one-time backend calibration
+    # (NumPy-vs-JAX bit-identity proofs + crossover benchmark, which
+    # trace XLA programs) and the legacy jit kernels outside both timed
+    # legs — every feature schema is dim 1-6
+    from repro.core import agent_arena
+
+    agent_arena.calibrate(range(1, 7))
+    warm = trace[: max(len(trace) // 10, 1)]
+    _run_once(warm, profiles, pool, slo_table, legacy=False,
+              policy="shabari")
+    _run_once(warm, profiles, pool, slo_table, legacy=False,
+              policy="shabari-legacy-engine")
+
+    ev_l, wall_l, sum_l = _run_once(
+        trace, profiles, pool, slo_table, legacy=False,
+        policy="shabari-legacy-engine")
+    ev_a, wall_a, sum_a = _run_once(
+        trace, profiles, pool, slo_table, legacy=False, policy="shabari")
+    eps_l = ev_l / wall_l
+    eps_a = ev_a / wall_a
+    emit("sim_bench.shabari_legacy_engine", wall_l / ev_l * 1e6,
+         f"n={len(trace)}|events={ev_l}|events_per_sec={eps_l:.0f}")
+    emit("sim_bench.shabari_arena", wall_a / ev_a * 1e6,
+         f"n={len(trace)}|events={ev_a}|events_per_sec={eps_a:.0f}")
+    emit("sim_bench.engine_speedup", 0.0,
+         f"x{eps_a / eps_l:.2f}|metrics_identical={sum_a == sum_l}")
+    if sum_a != sum_l:
+        raise RuntimeError(
+            "agent arena changed shabari summary metrics vs the legacy "
+            f"engine: {sum_a} != {sum_l}")
+    if eps_a < 3.0 * eps_l:
+        raise RuntimeError(
+            "agent arena below the 3x events/sec target: "
+            f"{eps_a:.0f} vs legacy {eps_l:.0f}")
 
 
 # --------------------------------------------------------- retry-path A/B
@@ -148,6 +205,7 @@ def run() -> None:
     emit("sim_bench.speedup", 0.0,
          f"x{eps_fast / eps_legacy:.2f}|metrics_identical={sum_fast == sum_legacy}")
 
+    run_engine_ab(trace, profiles, pool, slo_table)
     run_retry_ab(profiles, pool, slo_table)
 
 

@@ -29,29 +29,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.serving.golden import (  # noqa: E402
     GOLDEN_POLICY,
     LEGACY_ACQUIRE_SCENARIOS,
+    LEGACY_ENGINE_SCENARIOS,
     golden_specs,
     run_golden,
 )
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens")
 LEGACY_SUBDIR = "legacy-acquire"
+LEGACY_ENGINE_SUBDIR = "legacy-engine"
 
 
 def write_snapshot(scenario: str, out_dir: str, *,
-                   legacy_acquire: bool = False) -> Dict:
+                   legacy_acquire: bool = False,
+                   legacy_engine: bool = False) -> Dict:
     """Run one golden scenario and write its snapshot JSON; returns the
     written document (the schema tests/test_refresh_goldens.py pins)."""
     os.makedirs(out_dir, exist_ok=True)
     doc = {
-        "policy": GOLDEN_POLICY,
+        "policy": ("shabari-legacy-engine" if legacy_engine
+                   else GOLDEN_POLICY),
         "spec": dataclasses.asdict(golden_specs()[scenario]),
-        "summary": run_golden(scenario, legacy_acquire=legacy_acquire),
+        "summary": run_golden(scenario, legacy_acquire=legacy_acquire,
+                              legacy_engine=legacy_engine),
     }
     path = os.path.join(out_dir, f"{scenario}.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
-    tag = " (legacy-acquire)" if legacy_acquire else ""
+    tag = (" (legacy-acquire)" if legacy_acquire
+           else " (legacy-engine)" if legacy_engine else "")
     print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
           f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
     return doc
@@ -65,6 +71,10 @@ def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
         if scenario in LEGACY_ACQUIRE_SCENARIOS:
             write_snapshot(scenario, os.path.join(out_dir, LEGACY_SUBDIR),
                            legacy_acquire=True)
+        if scenario in LEGACY_ENGINE_SCENARIOS:
+            write_snapshot(
+                scenario, os.path.join(out_dir, LEGACY_ENGINE_SUBDIR),
+                legacy_engine=True)
 
 
 def main(argv=None) -> None:

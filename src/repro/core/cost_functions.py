@@ -124,3 +124,103 @@ def memory_costs(obs: Observation, n_classes: int,
             int(math.ceil(obs.max_mem_used_mb / class_mb)) - 1, n_classes
         )
     return _linear_costs(n_classes, target, under_slope=MEM_UNDER_SLOPE)
+
+
+# ---------------------------------------------------------------------------
+# Batched variants (agent-arena flush path)
+#
+# One call produces the (k, n_classes) cost matrix for k completed
+# invocations — the microbatch the arena applies in a single fused
+# update. Each row is BIT-IDENTICAL to the corresponding per-observation
+# function above (same float64 arithmetic, element-wise; asserted by
+# tests/test_agent_arena.py), so deferring cost computation to flush
+# time cannot change a single update.
+# ---------------------------------------------------------------------------
+
+
+def _linear_costs_batch(n_classes: int, targets: np.ndarray,
+                        under_slope: float = UNDER_SLOPE,
+                        over_slope: float = OVER_SLOPE) -> np.ndarray:
+    idx = np.arange(n_classes, dtype=np.float64)[None, :]
+    t = targets.astype(np.float64)[:, None]
+    below = np.maximum(t - idx, 0.0)
+    above = np.maximum(idx - t, 0.0)
+    return 1.0 + under_slope * below + over_slope * above
+
+
+def _clamp_batch(i: np.ndarray, n: int) -> np.ndarray:
+    return np.clip(i, 0, n - 1)
+
+
+def _trunc_div(a: np.ndarray, b: float) -> np.ndarray:
+    """``int(a / b)`` per element: truncation toward zero, matching the
+    scalar path's Python ``int()`` (np.floor_divide would round down)."""
+    return np.trunc(a / b).astype(np.int64)
+
+
+def absolute_vcpu_costs_batch(observations, n_classes: int) -> np.ndarray:
+    obs = list(observations)
+    exec_s = np.array([o.exec_time_s for o in obs], np.float64)
+    slo_s = np.array([o.slo_s for o in obs], np.float64)
+    alloc = np.array([o.alloc_vcpus for o in obs], np.int64)
+    used_f = np.array([o.max_vcpus_used for o in obs], np.float64)
+    util = np.array([o.vcpu_util for o in obs], np.float64)
+    cur = _clamp_batch(alloc - 1, n_classes)
+    used = _clamp_batch(np.ceil(used_f).astype(np.int64) - 1, n_classes)
+    met = exec_s <= slo_s
+    down = _trunc_div(slo_s - exec_s, ABS_Y_SECONDS)
+    up = 1 + _trunc_div(exec_s - slo_s, ABS_X_SECONDS)
+    target = np.where(
+        met,
+        np.minimum(cur, used) - down,
+        np.where(util < HIGH_UTIL_THRESHOLD, used, used + up),
+    )
+    return _linear_costs_batch(n_classes, _clamp_batch(target, n_classes))
+
+
+def proportional_vcpu_costs_batch(observations, n_classes: int) -> np.ndarray:
+    obs = list(observations)
+    exec_s = np.array([o.exec_time_s for o in obs], np.float64)
+    slo_s = np.array([o.slo_s for o in obs], np.float64)
+    alloc = np.array([o.alloc_vcpus for o in obs], np.int64)
+    used_f = np.array([o.max_vcpus_used for o in obs], np.float64)
+    util = np.array([o.vcpu_util for o in obs], np.float64)
+    cur = _clamp_batch(alloc - 1, n_classes)
+    used = _clamp_batch(np.ceil(used_f).astype(np.int64) - 1, n_classes)
+    met = exec_s <= slo_s
+    scale = exec_s / np.maximum(slo_s, 1e-9)
+    met_target = np.ceil((np.minimum(cur, used) + 1) * scale).astype(np.int64) - 1
+    viol_target = np.maximum(
+        np.ceil((used + 1) * scale).astype(np.int64) - 1, used + 1
+    )
+    target = np.where(
+        met,
+        met_target,
+        np.where(util < HIGH_UTIL_THRESHOLD, used, viol_target),
+    )
+    return _linear_costs_batch(n_classes, _clamp_batch(target, n_classes))
+
+
+def memory_costs_batch(observations, n_classes: int,
+                       class_mb: int = MEM_CLASS_MB) -> np.ndarray:
+    obs = list(observations)
+    alloc = np.array([o.alloc_mem_mb for o in obs], np.float64)
+    used = np.array([o.max_mem_used_mb for o in obs], np.float64)
+    oom = np.array([o.oom_killed for o in obs], bool)
+    target = np.where(
+        oom,
+        np.ceil(alloc / class_mb).astype(np.int64),
+        np.ceil(used / class_mb).astype(np.int64) - 1,
+    )
+    return _linear_costs_batch(
+        n_classes, _clamp_batch(target, n_classes),
+        under_slope=MEM_UNDER_SLOPE,
+    )
+
+
+# per-observation → batched lookup for configurable cost callables
+BATCHED_COST_FNS = {
+    absolute_vcpu_costs: absolute_vcpu_costs_batch,
+    proportional_vcpu_costs: proportional_vcpu_costs_batch,
+    memory_costs: memory_costs_batch,
+}

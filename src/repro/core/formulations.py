@@ -62,6 +62,18 @@ class FormulationAllocator:
         key, feats = self._key_and_features(function, x)
         return self.inner.allocate(key, feats, input_size_mb)
 
+    def allocate_batch(self, items):
+        """Microbatch pass-through: shared-agent modes may map several
+        items onto the same key — predictions don't mutate state, so
+        duplicates in one batch are safe."""
+        mapped = [self._key_and_features(fn, x) for fn, x, _ in items]
+        return self.inner.allocate_batch(
+            [(key, feats, items[i][2]) for i, (key, feats) in enumerate(mapped)]
+        )
+
     def feedback(self, function: str, x: np.ndarray, obs: Observation) -> None:
         key, feats = self._key_and_features(function, x)
         self.inner.feedback(key, feats, obs)
+
+    def flush(self) -> None:
+        self.inner.flush()

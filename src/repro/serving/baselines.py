@@ -185,7 +185,6 @@ class CypressPolicy(Policy):
 
     def allocate(self, arrival, meta, sim):
         fn = arrival.function
-        size = input_size_mb(fn, meta)
         mem_share = self._mem_obs.get(fn, 512.0)
         # container sized for a batch of invocations (batch-oriented
         # provisioning) even when arrivals are sparse
@@ -202,7 +201,14 @@ class CypressPolicy(Policy):
 
 
 class ShabariPolicy(Policy):
-    """The paper's system: delayed per-invocation decisions."""
+    """The paper's system: delayed per-invocation decisions.
+
+    ``engine`` selects the allocator implementation: ``"arena"``
+    (default, the batched agent arena — see ``repro.core.agent_arena``)
+    or ``"legacy"`` (one jit'd dispatch per per-function agent per
+    event). Allocations and metrics are bit-identical either way
+    (asserted by the sim_bench engine A/B and the legacy-engine golden
+    snapshot); only wall-clock differs."""
 
     name = "shabari"
     uses_shabari_scheduler = True
@@ -210,7 +216,8 @@ class ShabariPolicy(Policy):
 
     def __init__(self, *, vcpu_cost_fn=None, vcpu_confidence: int = 10,
                  mem_confidence: Optional[int] = None,
-                 default_vcpus: int = 10, n_vcpu_classes: int = 32):
+                 default_vcpus: int = 10, n_vcpu_classes: int = 32,
+                 engine: str = "arena"):
         from repro.core.cost_functions import absolute_vcpu_costs
 
         kwargs = dict(
@@ -220,20 +227,55 @@ class ShabariPolicy(Policy):
             default_vcpus=default_vcpus,
             n_vcpu_classes=n_vcpu_classes,
             vcpu_cost_fn=vcpu_cost_fn or absolute_vcpu_costs,
+            engine=engine,
         )
         self.allocator = ResourceAllocator(**kwargs)
         self.featurizer = Featurizer()
         self._features: Dict[int, np.ndarray] = {}
+        # same-timestamp arrivals prefetched by begin_arrival_batch:
+        # invocation_id -> (Allocation, aux)
+        self._prealloc: Dict[int, Tuple[Allocation, tuple]] = {}
+
+    def _featurize(self, arrival, meta, sim):
+        fn = arrival.function
+        x = self.featurizer.extract(fn, sim.profiles[fn].input_type, meta)
+        return x, input_size_mb(fn, meta)
+
+    def allocate_with_aux(self, arrival, meta, sim, aux=None):
+        pre = self._prealloc.pop(arrival.invocation_id, None)
+        if pre is not None:
+            alloc, aux = pre
+            self._features[arrival.invocation_id] = aux[0]
+            return alloc, aux
+        if aux is None:
+            # first sight of this invocation: featurize once; the tuple
+            # rides the retry payload so re-allocations (the legacy
+            # per-retry path) never re-run Featurizer / input_size_mb
+            aux = self._featurize(arrival, meta, sim)
+        x, size = aux
+        self._features[arrival.invocation_id] = x
+        return self.allocator.allocate(arrival.function, x, size), aux
 
     def allocate(self, arrival, meta, sim):
-        fn = arrival.function
-        input_type = sim.profiles[fn].input_type
-        x = self.featurizer.extract(fn, input_type, meta)
-        self._features[arrival.invocation_id] = x
-        return self.allocator.allocate(fn, x, input_size_mb(fn, meta))
+        return self.allocate_with_aux(arrival, meta, sim)[0]
+
+    def begin_arrival_batch(self, items, sim):
+        """Featurize in event order (the Featurizer's running stats are
+        order-sensitive), then serve every first allocation of this
+        timestamp with one fused arena predict."""
+        batch = []
+        for arrival, meta in items:
+            aux = self._featurize(arrival, meta, sim)
+            batch.append((arrival.invocation_id, arrival.function, aux))
+        allocs = self.allocator.allocate_batch(
+            [(fn, aux[0], aux[1]) for _, fn, aux in batch]
+        )
+        for (iid, fn, aux), alloc in zip(batch, allocs):
+            self._prealloc[iid] = (alloc, aux)
 
     def forget(self, arrival):
         self._features.pop(arrival.invocation_id, None)
+        self._prealloc.pop(arrival.invocation_id, None)
 
     def feedback(self, arrival, meta, result, sim):
         x = self._features.pop(arrival.invocation_id, None)

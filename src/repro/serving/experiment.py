@@ -50,6 +50,13 @@ def make_policy(name: str, profiles, pool, slo_table, seed: int = 0):
         return B.CypressPolicy(profiles, pool, seed=seed)
     if name == "shabari":
         return B.ShabariPolicy()
+    if name == "shabari-legacy-engine":
+        # the pre-arena allocator path (one jit dispatch per agent per
+        # event); allocations are bit-identical to "shabari" — pinned by
+        # tests/goldens/legacy-engine/ and the sim_bench engine A/B
+        p = B.ShabariPolicy(engine="legacy")
+        p.name = "shabari-legacy-engine"
+        return p
     if name == "shabari-openwhisk-sched":
         p = B.ShabariPolicy()
         p.name = "shabari-openwhisk-sched"

@@ -36,6 +36,14 @@ ATOL = 1e-8
 # stay independently regression-tested (tests/test_reservation.py).
 LEGACY_ACQUIRE_SCENARIOS = ("multi-cluster", "oversubscribe", "poisson-steady")
 
+# The allocator-engine A/B: snapshotted under tests/goldens/
+# legacy-engine/ with ResourceAllocator(engine="legacy") — the
+# per-object pre-arena path. Unlike the acquire A/B this is NOT a
+# semantics fork: the snapshot must equal the main golden bit-for-bit
+# (the arena is a pure fast path), which tests/test_agent_arena.py
+# asserts, so a numerics drift in either engine trips CI.
+LEGACY_ENGINE_SCENARIOS = ("heavy-tail-inputs",)
+
 
 # per-scenario SimConfig overrides: multi-cluster splits the same
 # 4-worker footprint into 2 clusters x 2 workers behind the spill-over
@@ -83,9 +91,11 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
     }
 
 
-def run_golden(scenario: str, *, legacy_acquire: bool = False) -> Dict[str, float]:
+def run_golden(scenario: str, *, legacy_acquire: bool = False,
+               legacy_engine: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     cfg = golden_sim_config(scenario)
     if legacy_acquire:
         cfg = dataclasses.replace(cfg, legacy_acquire=True)
-    return run_scenario(GOLDEN_POLICY, spec, sim_cfg=cfg).summary
+    policy = "shabari-legacy-engine" if legacy_engine else GOLDEN_POLICY
+    return run_scenario(policy, spec, sim_cfg=cfg).summary

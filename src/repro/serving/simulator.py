@@ -17,9 +17,18 @@ and contention. Modeled effects, each tied to a paper observation:
   partway through (§4.3.2 safeguards exist because of this);
 * queueing + timeouts: invocations that cannot be placed retry and
   eventually time out (the §7.5 oversubscription study). The
-  Allocation is decided ONCE at first arrival and carried through
-  retries; timed-out invocations report it without re-entering the
-  policy (pre-fix behavior behind ``SimConfig.legacy_retry_alloc``).
+  Allocation — and the policy's featurization cache (aux) — is decided
+  ONCE at first arrival and carried through retries; timed-out
+  invocations report it without re-entering the policy (pre-fix
+  behavior behind ``SimConfig.legacy_retry_alloc``).
+
+Event-loop microbatching: consecutive same-timestamp arrivals are
+popped together and offered to ``Policy.begin_arrival_batch`` before
+being processed in order, so a learning policy (the agent arena,
+``repro.core.agent_arena``) serves them with one fused predict
+dispatch; pending agent updates always flush before any prediction for
+the same function, keeping served allocations bit-identical to the
+sequential path.
 
 ``SimConfig(n_clusters=N)`` scales the testbed to N such clusters
 behind a front-door :class:`repro.core.router.Router` (home-cluster
@@ -163,6 +172,24 @@ class Policy:
 
     def allocate(self, arrival: Arrival, meta: Dict, sim: "Simulator"):
         raise NotImplementedError
+
+    def allocate_with_aux(self, arrival: Arrival, meta: Dict,
+                          sim: "Simulator", aux=None):
+        """``allocate`` plus an opaque per-invocation cache. The
+        simulator threads ``aux`` through the retry payload alongside
+        the cached Allocation, so any path that re-enters allocation
+        (``SimConfig.legacy_retry_alloc``) reuses the first attempt's
+        featurized input + input size instead of re-running the
+        Featurizer every 0.5 s retry."""
+        return self.allocate(arrival, meta, sim), aux
+
+    def begin_arrival_batch(self, items: List[Tuple[Arrival, Dict]],
+                            sim: "Simulator") -> None:
+        """Hook: all same-timestamp arrivals that need a first
+        allocation, in event order. Learning policies prefetch them as
+        one fused microbatched prediction (the agent arena); the
+        default is a no-op and each arrival allocates individually."""
+        pass
 
     def feedback(self, arrival: Arrival, meta: Dict, result: InvocationResult,
                  sim: "Simulator") -> None:
@@ -321,22 +348,26 @@ class Simulator:
         self.policy.forget(arrival)
 
     def _on_arrival(self, arrival: Arrival, first_seen: float,
-                    alloc=None) -> None:
+                    alloc=None, aux=None) -> None:
         meta = self.input_pool[arrival.function][arrival.input_idx]
         now = self.now
         if self.cfg.legacy_retry_alloc:
             # pre-fix retry path kept for A/B benchmarking (sim_bench):
-            # re-predict on every retry, even when about to time out
-            alloc = self.policy.allocate(arrival, meta, self)
+            # re-predict on every retry, even when about to time out.
+            # The featurized input + input size ride the retry payload
+            # (aux), so only the PREDICT re-runs — not the Featurizer.
+            alloc, aux = self.policy.allocate_with_aux(
+                arrival, meta, self, aux)
         if now - first_seen > self.cfg.queue_timeout_s:
             # the cached allocation from the first attempt is reported;
             # a timed-out invocation never touches the policy again
             if alloc is None:  # only reachable with queue_timeout_s <= 0
-                alloc = self.policy.allocate(arrival, meta, self)
+                alloc, aux = self.policy.allocate_with_aux(
+                    arrival, meta, self, aux)
             self._record_terminal(arrival, alloc, first_seen, timed_out=True)
             return
         if alloc is None:
-            alloc = self.policy.allocate(arrival, meta, self)
+            alloc, aux = self.policy.allocate_with_aux(arrival, meta, self, aux)
 
         route = self.router.route(arrival.function, alloc, now)
         decision = route.decision
@@ -345,10 +376,11 @@ class Simulator:
             self._record_terminal(arrival, alloc, first_seen, shed=True)
             return
         if decision.queued:
-            # carry the allocation: retries must not re-run the policy
-            # (front-door admission queueing lands here too)
+            # carry the allocation AND the featurization cache: retries
+            # must not re-run the policy or the Featurizer (front-door
+            # admission queueing lands here too)
             self._push(now + self.cfg.retry_interval_s, "arrival",
-                       (arrival, first_seen, alloc))
+                       (arrival, first_seen, alloc, aux))
             return
 
         cluster = self.clusters[route.cluster_idx]
@@ -506,7 +538,7 @@ class Simulator:
     # ------------------------------------------------------------ run
     def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
         for a in arrivals:
-            self._push(a.t, "arrival", (a, a.t, None))
+            self._push(a.t, "arrival", (a, a.t, None, None))
         reap_t = 60.0
         self._push(reap_t, "reap", None)
         while self._events:
@@ -514,8 +546,27 @@ class Simulator:
             self.now = t
             self.events_processed += 1
             if kind == "arrival":
-                arrival, first_seen, alloc = payload
-                self._on_arrival(arrival, first_seen, alloc)
+                # microbatch every CONSECUTIVE same-timestamp arrival:
+                # nothing can be interleaved between them (an intervening
+                # finish/warm_start would break the batch), so
+                # prefetching their allocations in one fused dispatch is
+                # bit-identical to processing them one by one
+                payloads = [payload]
+                while (self._events and self._events[0][0] == t
+                       and self._events[0][2] == "arrival"):
+                    payloads.append(heapq.heappop(self._events)[3])
+                self.events_processed += len(payloads) - 1
+                if len(payloads) > 1 and not self.cfg.legacy_retry_alloc:
+                    fresh = [
+                        (a, self.input_pool[a.function][a.input_idx])
+                        for a, fs, alloc, _ in payloads
+                        if alloc is None
+                        and t - fs <= self.cfg.queue_timeout_s
+                    ]
+                    if len(fresh) > 1:
+                        self.policy.begin_arrival_batch(fresh, self)
+                for arrival, first_seen, alloc, aux in payloads:
+                    self._on_arrival(arrival, first_seen, alloc, aux)
             elif kind == "warm_start":
                 arrival, meta, alloc, c, lat, first_seen = payload
                 if c.reserved and t - first_seen > self.cfg.queue_timeout_s:
