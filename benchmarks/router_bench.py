@@ -1,5 +1,6 @@
 """Front-door router sweep: 1/2/4 clusters x {hashing, spill-over,
-random} routing on the flash-crowd and oversubscribe scenarios.
+estimate, random} routing on the flash-crowd and oversubscribe
+scenarios.
 
 The TOTAL worker footprint is held constant across cluster counts
 (16 workers as 1x16, 2x8, or 4x4), so every row sees the same hardware
@@ -30,7 +31,7 @@ TOTAL_WORKERS = 8 if QUICK else 16
 DURATION_S = 240.0 if QUICK else 360.0
 RPS = 1.0 if QUICK else 2.0  # offered load scales with the fleet
 CLUSTER_COUNTS = (1, 2, 4)
-ROUTINGS = ("hashing", "spill-over", "random")
+ROUTINGS = ("hashing", "spill-over", "estimate", "random")
 # Loads chosen so the HOT cluster saturates while total capacity still
 # suffices — the front-door regime. (At sustained whole-fleet overload
 # no routing policy can win: shedding work via queue timeouts then
@@ -88,7 +89,12 @@ def run() -> None:
         for n_clusters in CLUSTER_COUNTS:
             for routing in ROUTINGS:
                 if n_clusters == 1 and routing != "hashing":
-                    continue  # one cluster: every routing is identical
+                    # one cluster: hashing/spill-over/random are
+                    # identical (estimate differs via warming-soon
+                    # binding even at c1 — covered by
+                    # tests/test_router.py's single-cluster estimate
+                    # case; this sweep compares front-door policies)
+                    continue
                 summary, router, wall = _run_cell(
                     trace, profiles, pool, slo_table, n_clusters, routing)
                 viol[(n_clusters, routing)] = summary["slo_violation_pct"]
@@ -100,7 +106,8 @@ def run() -> None:
                     f"|cold_start_pct={summary['cold_start_pct']:.2f}"
                     f"|timeout_pct={summary['timeout_pct']:.2f}"
                     f"|spills_warm={router.spills_warm}"
-                    f"|spills_cold={router.spills_cold}",
+                    f"|spills_cold={router.spills_cold}"
+                    f"|binds_warming={router.binds_warming}",
                 )
         for n_clusters in CLUSTER_COUNTS[1:]:
             gain = (viol[(n_clusters, "hashing")]

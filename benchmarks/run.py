@@ -42,6 +42,7 @@ MODULES = [
     ("sim_bench", "benchmarks.sim_bench"),
     ("router_bench", "benchmarks.router_bench"),
     ("admission_bench", "benchmarks.admission_bench"),
+    ("estimate_bench", "benchmarks.estimate_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]

@@ -27,6 +27,7 @@ from typing import Dict, Optional
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.golden import (  # noqa: E402
+    ESTIMATE_ROUTING_SCENARIOS,
     GOLDEN_POLICY,
     LEGACY_ACQUIRE_SCENARIOS,
     LEGACY_ENGINE_SCENARIOS,
@@ -37,11 +38,13 @@ from repro.serving.golden import (  # noqa: E402
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens")
 LEGACY_SUBDIR = "legacy-acquire"
 LEGACY_ENGINE_SUBDIR = "legacy-engine"
+ESTIMATE_SUBDIR = "estimate-routing"
 
 
 def write_snapshot(scenario: str, out_dir: str, *,
                    legacy_acquire: bool = False,
-                   legacy_engine: bool = False) -> Dict:
+                   legacy_engine: bool = False,
+                   estimate_routing: bool = False) -> Dict:
     """Run one golden scenario and write its snapshot JSON; returns the
     written document (the schema tests/test_refresh_goldens.py pins)."""
     os.makedirs(out_dir, exist_ok=True)
@@ -50,14 +53,16 @@ def write_snapshot(scenario: str, out_dir: str, *,
                    else GOLDEN_POLICY),
         "spec": dataclasses.asdict(golden_specs()[scenario]),
         "summary": run_golden(scenario, legacy_acquire=legacy_acquire,
-                              legacy_engine=legacy_engine),
+                              legacy_engine=legacy_engine,
+                              estimate_routing=estimate_routing),
     }
     path = os.path.join(out_dir, f"{scenario}.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     tag = (" (legacy-acquire)" if legacy_acquire
-           else " (legacy-engine)" if legacy_engine else "")
+           else " (legacy-engine)" if legacy_engine
+           else " (estimate-routing)" if estimate_routing else "")
     print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
           f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
     return doc
@@ -75,6 +80,10 @@ def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
             write_snapshot(
                 scenario, os.path.join(out_dir, LEGACY_ENGINE_SUBDIR),
                 legacy_engine=True)
+        if scenario in ESTIMATE_ROUTING_SCENARIOS:
+            write_snapshot(
+                scenario, os.path.join(out_dir, ESTIMATE_SUBDIR),
+                estimate_routing=True)
 
 
 def main(argv=None) -> None:

@@ -537,6 +537,15 @@ class ArenaEngine:
 
     # ---------------------------------------------------------- feedback
     def enqueue_update(self, function: str, x: np.ndarray, obs) -> None:
+        """Defer one completed-invocation feedback (CSOAA update for
+        both agents). Nothing is applied yet — the update is queued and
+        applied by the next :meth:`flush`, which every predict for
+        ``function`` forces first (the flush-before-predict contract:
+        a prediction never reads stale rows of its OWN function;
+        updates for other functions touch disjoint rows and may stay
+        queued, which is what lets batches grow). ``updates()`` counts
+        the queued feedback immediately, so confidence thresholds see
+        it without a flush."""
         dim = self._dim_of(function, x)
         xb = np.concatenate([np.asarray(x, F32), np.ones(1, F32)])
         self._pending.append(_PendingUpdate(function, xb, obs))
@@ -835,7 +844,11 @@ class ArenaEngine:
     def predict(self, function: str, x: np.ndarray, want_vcpu: bool,
                 want_mem: bool) -> Tuple[Optional[int], Optional[int]]:
         """Singleton prediction — the event loop's steady state, so it
-        skips the batch machinery entirely on the NumPy backend."""
+        skips the batch machinery entirely on the NumPy backend.
+        Honors the flush-before-predict contract: pending updates for
+        ``function`` are applied first (see :meth:`enqueue_update`);
+        pending updates for OTHER functions are left queued unless the
+        256-entry cap forces a drain."""
         if not (want_vcpu or want_mem):
             if len(self._pending) >= 256:
                 self.flush()

@@ -17,6 +17,22 @@ the router stack cold starts onto a free-looking worker. A reservation
 either converts to a running acquisition when the cold start completes
 (:meth:`Worker.commit_reservation`) or is released on timeout/cancel
 (:meth:`Worker.cancel_reservation`).
+
+Read-side signals for the front door, all incremental (no O(running
+invocations) rescans per route):
+
+* ``Worker.idle_warm`` / ``Cluster.has_idle_warm`` — warm containers
+  usable NOW (``warm_at <= now``), via the per-function index;
+* ``Worker.warming_soon`` / ``Cluster.warming_soon`` — uncommitted
+  containers still warming whose ``warm_at`` falls within a horizon
+  (background exact-size launches, §5 case 2). Invisible to the warm
+  lookups above, these are placement targets for the router's
+  estimate-routing mode: an invocation can bind to one and start the
+  moment it turns warm;
+* per-worker ``active_demand_vcpus`` / ``active_net_gbps`` aggregates —
+  the §5 contention inputs, maintained by :meth:`Worker.add_active`/
+  :meth:`Worker.remove_active`, so the router can score a candidate
+  worker's expected co-runner slowdown in O(1).
 """
 
 from __future__ import annotations
@@ -148,6 +164,35 @@ class Worker:
             return []
         return [c for c in byf.values() if not c.busy and c.warm_at <= now]
 
+    def warming_soon(self, function: str, now: float, horizon_s: float,
+                     vcpus: int, mem_mb: int) -> Optional[Container]:
+        """The soonest-warm UNCOMMITTED container for ``function`` that
+        is at least (vcpus, mem_mb) big, still warming with ``warm_at``
+        within ``horizon_s`` of ``now``, and whose reservation this
+        worker can still take (``fits`` is checked per container, not
+        after selection — a too-big soonest candidate must not hide a
+        later one that fits).
+
+        Only background-launched containers qualify: a cold start placed
+        for a specific invocation is ``busy`` (and ``reserved``) for its
+        whole warm-up, so it can never be handed to a second invocation.
+        Uses the per-function index — cost is O(this function's
+        containers on the worker), not O(all containers)."""
+        byf = self.by_function.get(function)
+        if not byf:
+            return None
+        best: Optional[Container] = None
+        for c in byf.values():
+            if c.busy or c.warm_at <= now or c.warm_at > now + horizon_s:
+                continue
+            if c.vcpus < vcpus or c.mem_mb < mem_mb:
+                continue
+            if not self.fits(c.vcpus, c.mem_mb):
+                continue
+            if best is None or c.warm_at < best.warm_at:
+                best = c
+        return best
+
 
 class Cluster:
     def __init__(
@@ -209,6 +254,22 @@ class Cluster:
         """Emptiness probe — the router's warm-spill pre-check; defers
         to Worker.idle_warm so the predicate has one source of truth."""
         return any(w.idle_warm(function, now) for w in self.workers)
+
+    def warming_soon(self, function: str, now: float, horizon_s: float,
+                     vcpus: int, mem_mb: int) -> Optional[Container]:
+        """Cluster-wide soonest-warm uncommitted container within the
+        horizon whose worker can still take its reservation — the
+        estimate router's warming-soon placement candidate. Defers the
+        per-container predicate (including ``fits``) to
+        :meth:`Worker.warming_soon`."""
+        best: Optional[Container] = None
+        for w in self.workers:
+            c = w.warming_soon(function, now, horizon_s, vcpus, mem_mb)
+            if c is None:
+                continue
+            if best is None or c.warm_at < best.warm_at:
+                best = c
+        return best
 
     def idle_warm(self, function: str, now: float) -> List[Container]:
         out: List[Container] = []

@@ -7,19 +7,43 @@ spill-over dominate behavior under flash crowds (Fifer, arXiv
 per-invocation right-sizing (arXiv 2510.02404). The router applies the
 same cold-start-aware philosophy as Shabari's scheduler, one level up:
 
+Four routing modes (``SimConfig.routing`` selects):
+
 * ``hashing`` — each function is hashed to a "home" cluster and always
   routed there (warm-pool locality, no load awareness);
 * ``spill-over`` (default) — route to the home cluster while it can
   serve the invocation; when the home cluster has no warm container,
   prefer a WARM container on a remote cluster over a local cold start,
   and when the home cluster is saturated, spill to the least-loaded
-  remote cluster with capacity;
+  remote cluster with capacity. Spill decisions rank candidates by raw
+  committed-LOAD fraction;
+* ``estimate`` — score EVERY candidate cluster by estimated completion
+  time (ECT) and route to the minimum (ties prefer home, then lower
+  index). The ECT combines, per candidate: residual wait for a warm or
+  WARMING-SOON container (an uncommitted background launch whose
+  ``warm_at`` falls within ``estimate_horizon_s`` — a placement target
+  no other mode can see), expected cold-start latency for the predicted
+  container size, scheduling overhead, and the §5 contention slowdown
+  from the candidate worker's ``active_demand_vcpus`` /
+  ``active_net_gbps`` aggregates applied to a per-function execution
+  estimate calibrated online from observed exec times
+  (:meth:`Router.observe_exec`). Spills happen only when the estimate
+  says a remote placement finishes sooner — a contended home warm pool
+  loses to an idle remote cold start once the slowdown exceeds the
+  cold-start price. Unlike the other modes this one does NOT degenerate
+  at ``n_clusters=1``: warming-soon binding still short-circuits cold
+  starts inside a single cluster;
 * ``random`` — seeded uniform cluster choice (the load-oblivious
   baseline for benchmarks/router_bench).
 
 ``route`` composes per-cluster :class:`ShabariScheduler` decisions and
 is itself side-effect-free: like ``schedule``, it only inspects state,
-so the runtime remains the sole owner of load mutation.
+so the runtime remains the sole owner of load mutation. The one
+exception is estimate mode's warming-soon choice, which returns a
+``Decision.pending`` container for the RUNTIME to commit (mark busy +
+reserve) — the router still mutates nothing itself. ``RouteDecision.
+est_s`` carries the winning estimate for observability (None outside
+estimate mode).
 
 The ``_load`` signal is truthful about in-flight cold starts: the
 runtime reserves capacity at PLACEMENT (``Worker.reserve``), so a
@@ -42,14 +66,19 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import random
-from typing import List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import Allocation
-from repro.core.cluster import Cluster
+from repro.core.cluster import Cluster, Worker
 from repro.core.scheduler import Decision, ShabariScheduler
 
-ROUTING_POLICIES = ("hashing", "spill-over", "random")
+ROUTING_POLICIES = ("hashing", "spill-over", "estimate", "random")
 ADMISSION_POLICIES = ("none", "shed", "queue")
+
+# estimate-mode calibration: EWMA smoothing for observed per-function
+# exec times, and the prior used before the first observation (seconds)
+EXEC_EWMA_ALPHA = 0.3
+DEFAULT_EXEC_ESTIMATE_S = 1.0
 
 
 @dataclasses.dataclass
@@ -58,6 +87,10 @@ class RouteDecision:
     decision: Decision
     spilled: bool = False  # placed off the function's home cluster
     shed: bool = False  # rejected by fleet-wide admission control
+    # estimate mode: the winning candidate's estimated completion time
+    # (seconds from now until the invocation would finish), None for
+    # every other routing policy and for queued/shed outcomes
+    est_s: Optional[float] = None
 
 
 class Router:
@@ -70,6 +103,13 @@ class Router:
         seed: int = 0,
         admission: str = "none",
         admission_headroom: float = 0.95,
+        estimate_horizon_s: float = 1.5,
+        cold_base_s: float = 0.45,
+        cold_per_gb_s: float = 0.12,
+        sched_overhead_s: float = 0.001,
+        physical_cores: int = 96,
+        nic_gbps: float = 10.0,
+        network_fed: Optional[Callable[[str], bool]] = None,
     ):
         assert routing in ROUTING_POLICIES, routing
         assert admission in ADMISSION_POLICIES, admission
@@ -86,6 +126,23 @@ class Router:
         self.routing = routing
         self.admission = admission
         self.admission_headroom = admission_headroom
+        # estimate-mode model parameters (mirroring the simulator's
+        # SimConfig so the router's forecasts use the same cold-start
+        # curve, scheduling overhead, and §5 contention constants the
+        # runtime will actually charge)
+        assert estimate_horizon_s >= 0.0
+        self.estimate_horizon_s = estimate_horizon_s
+        self.cold_base_s = cold_base_s
+        self.cold_per_gb_s = cold_per_gb_s
+        self.sched_overhead_s = sched_overhead_s
+        self.physical_cores = max(physical_cores, 1)
+        self.nic_gbps = nic_gbps
+        self.network_fed = network_fed
+        # per-function EWMAs of observed UNCONTENDED exec seconds and
+        # object-store NIC draw — the calibration state behind
+        # _exec_estimate/_slowdown (fed by observe_exec)
+        self._exec_ewma: Dict[str, float] = {}
+        self._net_ewma: Dict[str, float] = {}
         self._rng = random.Random(seed)
         # per-cluster vCPU capacity is fixed for the cluster's lifetime
         self._capacity = [
@@ -96,6 +153,9 @@ class Router:
         self.routed_home = 0
         self.spills_warm = 0  # remote warm container beat a local cold start
         self.spills_cold = 0  # home saturated; cold-started remotely
+        # estimate mode: invocations bound to a still-warming container
+        # (counted IN ADDITION to routed_home/spills_warm)
+        self.binds_warming = 0
         self.admission_shed = 0  # arrivals rejected at the front door
         # queue-mode rejections count EVENTS, not arrivals: a held
         # arrival re-enters route() on every retry and increments this
@@ -133,6 +193,180 @@ class Router:
             for ci in range(len(self.clusters))
         )
 
+    # ------------------------------------------------- estimate scoring
+    def observe_exec(self, function: str, base_exec_s: float,
+                     net_gbps: float = 0.0) -> None:
+        """Estimator calibration hook: the runtime reports each
+        completion's UNCONTENDED execution time (seconds; the §5
+        contention factor already divided out, so candidate scoring can
+        re-apply each candidate's own slowdown without double counting)
+        and its object-store NIC draw (Gbps; 0 for non-network-fed
+        functions). Both fold into per-function EWMAs
+        (``EXEC_EWMA_ALPHA``); functions with no observation yet use
+        ``DEFAULT_EXEC_ESTIMATE_S`` / zero draw. The feed is
+        deterministic given the event order, so estimate-mode runs stay
+        reproducible under a fixed seed."""
+        if base_exec_s <= 0.0:
+            return
+        prev = self._exec_ewma.get(function)
+        self._exec_ewma[function] = (
+            base_exec_s if prev is None
+            else (1.0 - EXEC_EWMA_ALPHA) * prev + EXEC_EWMA_ALPHA * base_exec_s
+        )
+        prev_net = self._net_ewma.get(function)
+        self._net_ewma[function] = (
+            net_gbps if prev_net is None
+            else (1.0 - EXEC_EWMA_ALPHA) * prev_net
+            + EXEC_EWMA_ALPHA * net_gbps
+        )
+
+    def _exec_estimate(self, function: str) -> float:
+        return self._exec_ewma.get(function, DEFAULT_EXEC_ESTIMATE_S)
+
+    def _cold_estimate(self, alloc: Allocation) -> float:
+        """Mean-field cold-start latency for the predicted container
+        size (the simulator's curve without its lognormal jitter)."""
+        return self.cold_base_s + self.cold_per_gb_s * alloc.mem_mb / 1024.0
+
+    def _slowdown(self, w: Worker, function: str, alloc: Allocation) -> float:
+        """Forecast §5 contention on ``w`` if this invocation lands
+        there: CPU slowdown from active parallel demand plus our own
+        allocation (an upper bound on the function's true demand), NIC
+        slowdown from current object-store draw plus our own calibrated
+        draw (the net EWMA; the runtime charges the arriving
+        invocation's draw too, so the forecast must or it would
+        systematically understate busy-NIC placements) for network-fed
+        functions. O(1) — reads the worker's incremental aggregates."""
+        cpu = max(
+            1.0,
+            (w.active_demand_vcpus + float(alloc.vcpus)) / self.physical_cores,
+        )
+        net = 1.0
+        if self.network_fed is not None and self.network_fed(function):
+            own = self._net_ewma.get(function, 0.0)
+            net = max(1.0, (w.active_net_gbps + own) / self.nic_gbps)
+        return max(cpu, net)
+
+    def _estimate(self, ci: int, function: str, alloc: Allocation,
+                  now: float) -> Tuple[float, str, object]:
+        """Estimated completion time if cluster ``ci`` served this
+        invocation, as ``(est_s, kind, payload)`` with kind one of
+        ``"warm"`` / ``"warming"`` / ``"cold"`` / ``"queue"``.
+
+        The kinds mirror what the cluster's scheduler would actually do
+        (warm containers win before cold starts), so the estimate and
+        the eventual binding agree; ``"queue"`` (no capacity) is
+        returned with an infinite estimate — the route pass never binds
+        to a cluster that cannot place."""
+        cl = self.clusters[ci]
+        exec_est = self._exec_estimate(function)
+        # (a) warm container usable now — the EXACT container scheduler
+        # cases (1)/(2) would bind, so the contention forecast prices
+        # the worker that will actually serve the invocation
+        c = self.schedulers[ci].warm_candidate(function, alloc.vcpus,
+                                               alloc.mem_mb, now)
+        if c is not None:
+            slow = self._slowdown(c.worker, function, alloc)
+            return (self.sched_overhead_s + slow * exec_est, "warm", c)
+        # (b)/(c) no warm container: compare binding to a warming-soon
+        # container (pay the residual warm-up) against this cluster's
+        # own cold start, and forecast the cheaper. Unlike the warm
+        # case there is no scheduler binding to mirror — the warming
+        # bind is a router-invented placement — so a container warming
+        # near the horizon edge must not shadow a faster cold start on
+        # an idle worker.
+        c = cl.warming_soon(function, now, self.estimate_horizon_s,
+                            alloc.vcpus, alloc.mem_mb)
+        warming_est = None
+        if c is not None:
+            slow = self._slowdown(c.worker, function, alloc)
+            warming_est = ((c.warm_at - now) + self.sched_overhead_s
+                           + slow * exec_est)
+        w = self.schedulers[ci].cold_candidate(function, alloc.vcpus,
+                                               alloc.mem_mb)
+        cold_est = None
+        if w is not None:
+            slow = self._slowdown(w, function, alloc)
+            cold_est = (self._cold_estimate(alloc) + self.sched_overhead_s
+                        + slow * exec_est)
+        if warming_est is not None and (cold_est is None
+                                        or warming_est <= cold_est):
+            # ties prefer the warming bind: its warm-up is already paid
+            # for, so no new container (and no new reservation window)
+            return (warming_est, "warming", c)
+        if cold_est is not None:
+            return (cold_est, "cold", w)
+        # (d) saturated: nothing can be placed here right now
+        return (float("inf"), "queue", None)
+
+    def _route_estimate(self, function: str, alloc: Allocation,
+                        now: float) -> RouteDecision:
+        """Minimum-ECT routing: score every cluster, bind the winner.
+        Ties break toward the home cluster (warm-pool locality is free
+        tie insurance), then the lower cluster index — fully
+        deterministic."""
+        n = len(self.clusters)
+        home = self.home_cluster(function)
+        best = None
+        for ci in range(n):
+            est, kind, payload = self._estimate(ci, function, alloc, now)
+            if kind == "queue":
+                continue
+            key = (est, ci != home, ci)
+            if best is None or key < best[0]:
+                best = (key, ci, kind, payload)
+        if best is None:
+            # no cluster can place it — same terminal as spill-over's
+            # everything-saturated case; the runtime retries
+            return RouteDecision(
+                home,
+                Decision(None, cold_start=False, background_launch=None,
+                         queued=True),
+            )
+        (est, _, _), ci, kind, payload = best
+        spilled = ci != home
+        if kind == "warming":
+            # bind to the still-warming container: the runtime commits
+            # it (busy + reservation) and starts the invocation at
+            # payload.warm_at — a short wait instead of a cold start
+            d = Decision(None, cold_start=False, background_launch=None,
+                         pending=payload)
+            self.binds_warming += 1
+            if spilled:
+                self.spills_warm += 1
+            else:
+                self.routed_home += 1
+            return RouteDecision(ci, d, spilled=spilled, est_s=est)
+        # the winning candidate was already probed by _estimate on state
+        # that cannot have changed since, so build the Decision from it
+        # directly instead of re-running schedule()'s warm/cold scans —
+        # the constructions below mirror schedule()'s cases (1)-(3)
+        if kind == "warm":
+            c = payload
+            bg = None
+            if not (c.vcpus == alloc.vcpus and c.mem_mb == alloc.mem_mb):
+                # case 2: proactively launch the exact size in the
+                # background, like schedule() would
+                sched = self.schedulers[ci]
+                if sched.background_launch:
+                    w = sched.cold_candidate(function, alloc.vcpus,
+                                             alloc.mem_mb)
+                    if w is not None:
+                        bg = (w, alloc.vcpus, alloc.mem_mb)
+            d = Decision(c, cold_start=False, background_launch=bg)
+            if spilled:
+                self.spills_warm += 1
+            else:
+                self.routed_home += 1
+            return RouteDecision(ci, d, spilled=spilled, est_s=est)
+        d = Decision(None, cold_start=True,
+                     background_launch=(payload, alloc.vcpus, alloc.mem_mb))
+        if spilled:
+            self.spills_cold += 1
+        else:
+            self.routed_home += 1
+        return RouteDecision(ci, d, spilled=spilled, est_s=est)
+
     # ------------------------------------------------------------ route
     def route(self, function: str, alloc: Allocation, now: float) -> RouteDecision:
         n = len(self.clusters)
@@ -145,6 +379,10 @@ class Router:
                 return RouteDecision(home, rejected, shed=True)
             self.admission_queue_events += 1  # queue-at-front-door: retry later
             return RouteDecision(home, rejected)
+        if self.routing == "estimate":
+            # does NOT degenerate at n == 1: warming-soon binding still
+            # short-circuits single-cluster cold starts
+            return self._route_estimate(function, alloc, now)
         if n == 1:
             d = self.schedulers[0].schedule(function, alloc, now)
             if not d.queued:

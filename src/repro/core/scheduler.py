@@ -43,6 +43,13 @@ class Decision:
     # exact-size container to launch in the background (case 2)
     background_launch: Optional[Tuple[Worker, int, int]]
     queued: bool = False  # no capacity anywhere
+    # estimate-routing only (repro.core.router): a still-warming
+    # uncommitted container the invocation binds to — it starts the
+    # moment ``pending.warm_at`` arrives, paying only the residual
+    # warm-up instead of a full cold start. The scheduler itself never
+    # sets this; the router does, after the warming-soon candidate won
+    # the completion-time estimate.
+    pending: Optional[Container] = None
 
 
 class ShabariScheduler:
@@ -84,37 +91,64 @@ class ShabariScheduler:
                 return w
         return None
 
+    def cold_candidate(self, function: str, vcpus: int,
+                       mem_mb: int) -> Optional[Worker]:
+        """Side-effect-free read: the worker a cold start for
+        ``function`` at (vcpus, mem_mb) WOULD land on right now, or None
+        when no worker fits. The router's estimate mode scores this
+        worker's contention aggregates; ``schedule`` makes the same walk
+        on the same state, so the answer matches the eventual binding."""
+        return self._pick_cold_worker(function, vcpus, mem_mb)
+
+    def warm_candidate(self, function: str, vcpus: int, mem_mb: int,
+                       now: float) -> Optional[Container]:
+        """Side-effect-free read: the warm container ``schedule`` would
+        route this (function, size) to — an exact-size container (LRU
+        first, case 1), else the smallest strictly-larger one (case 2,
+        only when ``route_larger``), else None. ``schedule`` itself
+        binds through this method, so the router's estimate mode scores
+        the contention of the worker that will actually serve the
+        invocation, not merely *a* warm worker."""
+        warm = self.cluster.idle_warm(function, now)
+        exact = [c for c in warm if c.vcpus == vcpus and c.mem_mb == mem_mb
+                 and c.worker.fits(vcpus, mem_mb)]
+        if exact:
+            exact.sort(key=lambda c: c.last_used)
+            return exact[0]
+        if not self.route_larger:
+            return None
+        larger = [
+            c for c in warm
+            if c.vcpus >= vcpus and c.mem_mb >= mem_mb
+            and c.worker.fits(c.vcpus, c.mem_mb)
+        ]
+        if not larger:
+            return None
+        larger.sort(key=lambda c: (c.vcpus - vcpus, c.mem_mb - mem_mb))
+        return larger[0]
+
     # -------------------------------------------------------- schedule
     def schedule(self, function: str, alloc: Allocation, now: float) -> Decision:
         """Place one invocation. Does not mutate load — the runtime calls
         ``start``/``finish`` as the invocation actually runs."""
         vcpus, mem = alloc.vcpus, alloc.mem_mb
 
-        # (1) exact-size warm container whose worker has headroom
-        warm = self.cluster.idle_warm(function, now)
-        exact = [c for c in warm if c.vcpus == vcpus and c.mem_mb == mem
-                 and c.worker.fits(vcpus, mem)]
-        if exact:
-            exact.sort(key=lambda c: c.last_used)
-            return Decision(exact[0], cold_start=False, background_launch=None)
-
-        # (2) smallest strictly-larger warm container
-        if self.route_larger:
-            larger = [
-                c for c in warm
-                if c.vcpus >= vcpus and c.mem_mb >= mem
-                and c.worker.fits(c.vcpus, c.mem_mb)
-            ]
-            if larger:
-                larger.sort(key=lambda c: (c.vcpus - vcpus, c.mem_mb - mem))
-                chosen = larger[0]
-                bg = None
-                if self.background_launch:
-                    w = self._pick_cold_worker(function, vcpus, mem)
-                    if w is not None:
-                        # idle containers carry no load; free to launch now
-                        bg = (w, vcpus, mem)
-                return Decision(chosen, cold_start=False, background_launch=bg)
+        # (1)/(2) warm routing: exact-size container, else smallest
+        # strictly-larger (selection shared with the router's estimate
+        # scoring via warm_candidate)
+        chosen = self.warm_candidate(function, vcpus, mem, now)
+        if chosen is not None:
+            if chosen.vcpus == vcpus and chosen.mem_mb == mem:
+                return Decision(chosen, cold_start=False,
+                                background_launch=None)
+            # case 2: proactively launch the exact size in the background
+            bg = None
+            if self.background_launch:
+                w = self._pick_cold_worker(function, vcpus, mem)
+                if w is not None:
+                    # idle containers carry no load; free to launch now
+                    bg = (w, vcpus, mem)
+            return Decision(chosen, cold_start=False, background_launch=bg)
 
         # (3) cold start at the exact size; _pick_cold_worker scanned
         # every worker, so None means no capacity anywhere — queue

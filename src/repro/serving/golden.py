@@ -44,6 +44,13 @@ LEGACY_ACQUIRE_SCENARIOS = ("multi-cluster", "oversubscribe", "poisson-steady")
 # asserts, so a numerics drift in either engine trips CI.
 LEGACY_ENGINE_SCENARIOS = ("heavy-tail-inputs",)
 
+# The completion-time-estimate routing mode: snapshotted under
+# tests/goldens/estimate-routing/ with SimConfig(routing="estimate"),
+# so the new front-door policy is regression-pinned independently while
+# every main golden keeps pinning the default spill-over behavior
+# (tests/test_router.py asserts the pin).
+ESTIMATE_ROUTING_SCENARIOS = ("multi-cluster",)
+
 
 # per-scenario SimConfig overrides: multi-cluster splits the same
 # 4-worker footprint into 2 clusters x 2 workers behind the spill-over
@@ -92,10 +99,13 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
 
 
 def run_golden(scenario: str, *, legacy_acquire: bool = False,
-               legacy_engine: bool = False) -> Dict[str, float]:
+               legacy_engine: bool = False,
+               estimate_routing: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     cfg = golden_sim_config(scenario)
     if legacy_acquire:
         cfg = dataclasses.replace(cfg, legacy_acquire=True)
+    if estimate_routing:
+        cfg = dataclasses.replace(cfg, routing="estimate")
     policy = "shabari-legacy-engine" if legacy_engine else GOLDEN_POLICY
     return run_scenario(policy, spec, sim_cfg=cfg).summary

@@ -31,8 +31,15 @@ the same function, keeping served allocations bit-identical to the
 sequential path.
 
 ``SimConfig(n_clusters=N)`` scales the testbed to N such clusters
-behind a front-door :class:`repro.core.router.Router` (home-cluster
-hashing + cold-start-aware spill-over; ``routing`` picks the policy).
+behind a front-door :class:`repro.core.router.Router`; ``routing``
+picks one of four policies — home-cluster ``hashing``, cold-start-aware
+``spill-over`` (default), completion-time-estimate ``estimate``
+(minimum-ECT placement including still-warming containers within
+``estimate_horizon_s``, calibrated online from observed exec times),
+and ``random``. The simulator feeds the estimator via
+``Router.observe_exec`` at every completion and commits estimate-mode
+``Decision.pending`` bindings (busy + reservation on a warming
+container, start at its ``warm_at``).
 
 Resource lifecycle: capacity is acquired at PLACEMENT, not at start — a
 placed cold start reserves its container's (vcpus, mem) for the whole
@@ -98,10 +105,23 @@ class SimConfig:
     legacy_scans: bool = False
     # Multi-cluster front door (repro.core.router): number of clusters
     # behind the router and the routing policy applied per arrival —
-    # "hashing" | "spill-over" | "random". With n_clusters=1 every
-    # policy degenerates to the single-cluster path.
+    # "hashing" | "spill-over" | "estimate" | "random". With
+    # n_clusters=1 the first, second, and fourth degenerate to the
+    # single-cluster path; "estimate" does NOT degenerate — its
+    # warming-soon binding (below) still short-circuits cold starts
+    # inside one cluster.
     n_clusters: int = 1
     routing: str = "spill-over"
+    # Estimate-mode horizon (SECONDS): a still-warming uncommitted
+    # container whose warm_at lies within this many seconds of the
+    # arrival is a placement target — the invocation binds to it
+    # (Decision.pending), the runtime reserves its capacity, and it
+    # starts the moment the container turns warm, paying the residual
+    # warm-up instead of a full cold start. Larger horizons trade
+    # certain short waits against speculative cold starts; the default
+    # covers the full cold-start range of the paper's container sizes
+    # (~0.5-1.3 s). Read only when routing == "estimate".
+    estimate_horizon_s: float = 1.5
     # Compatibility switch for A/B benchmarking (benchmarks/sim_bench):
     # restore the pre-fix retry path — one policy.allocate (a jit'd jax
     # dispatch for learning policies) per 0.5 s RETRY of a queued
@@ -212,6 +232,9 @@ class _Running:
     net_gbps: float
     arrival: Optional[Arrival] = None
     meta: Optional[Dict] = None
+    # uncontended exec seconds sampled at start — fed to the router's
+    # estimator calibration (Router.observe_exec) at finish
+    base_exec: float = 0.0
     # dynamic-contention bookkeeping: seconds of uncontended work left,
     # the slowdown currently applied, when it was last re-evaluated, and
     # a generation counter that invalidates superseded finish events.
@@ -274,6 +297,16 @@ class Simulator:
             routing=self.cfg.routing, seed=self.cfg.seed,
             admission=self.cfg.admission,
             admission_headroom=self.cfg.admission_headroom,
+            # estimate-mode model parameters: the router forecasts with
+            # the same cold-start curve, scheduling overhead, and §5
+            # contention constants this simulator charges
+            estimate_horizon_s=self.cfg.estimate_horizon_s,
+            cold_base_s=self.cfg.cold_base_s,
+            cold_per_gb_s=self.cfg.cold_per_gb_s,
+            sched_overhead_s=self.cfg.sched_overhead_s,
+            physical_cores=self.cfg.physical_cores,
+            nic_gbps=NIC_GBPS,
+            network_fed=lambda fn: base_function(fn) in NETWORK_FED,
         )
         # single-cluster aliases (the common case, and what most tests
         # and benchmarks reach for)
@@ -383,6 +416,22 @@ class Simulator:
                        (arrival, first_seen, alloc, aux))
             return
 
+        if decision.pending is not None:
+            # estimate routing bound this invocation to a still-warming
+            # uncommitted container (a §5 case-2 background launch):
+            # commit it — mark busy so no other arrival can take it,
+            # reserve its capacity (acquire-on-placement, same as a
+            # fresh cold start), and start when it turns warm. The
+            # invocation pays only the residual warm-up.
+            c = decision.pending
+            c.busy = True
+            if not self.cfg.legacy_acquire:
+                c.worker.reserve(c.vcpus, c.mem_mb)
+                c.reserved = True
+            self._push(c.warm_at, "warm_start",
+                       (arrival, meta, alloc, c, c.warm_at - now, first_seen))
+            return
+
         cluster = self.clusters[route.cluster_idx]
         if decision.background_launch and decision.container is not None:
             # case 2: larger warm container used; exact size in background
@@ -471,6 +520,7 @@ class Simulator:
         run = _Running(
             result=res, container=container, worker=w,
             demand_vcpus=demand, net_gbps=net, arrival=arrival, meta=meta,
+            base_exec=base_exec,
         )
         self._running[arrival.invocation_id] = run
         self._worker_running[w.wid][arrival.invocation_id] = run
@@ -532,6 +582,12 @@ class Simulator:
             oom_killed=res.oom_killed,
         )
         self.policy.feedback(arrival, meta, res, self)
+        # estimator calibration: report the UNCONTENDED exec time and
+        # the NIC draw so estimate-mode scoring can apply each
+        # candidate's own §5 slowdown without double counting (no-op
+        # read path for every other routing policy, so default-mode
+        # metrics are untouched)
+        self.router.observe_exec(res.function, run.base_exec, run.net_gbps)
         if self.dynamic:
             self._retime_worker(w)  # departures speed co-runners up
 

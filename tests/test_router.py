@@ -1,11 +1,17 @@
 """Front-door router tests: home-cluster affinity, cold-start-aware
-spill-over, routing-policy behavior, and end-to-end determinism."""
+spill-over, completion-time-estimate routing (warming-soon visibility,
+calibration, golden pin), routing-policy behavior, and end-to-end
+determinism."""
+
+import json
+import math
+import os
 
 import pytest
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster
-from repro.core.router import Router
+from repro.core.router import DEFAULT_EXEC_ESTIMATE_S, Router
 from repro.core.scheduler import ShabariScheduler
 from repro.serving.experiment import run_scenario
 from repro.serving.simulator import SimConfig
@@ -14,14 +20,15 @@ from repro.serving.workload import ScenarioSpec
 ALLOC = Allocation(4, 512)
 
 
-def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0):
+def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0, **kwargs):
     clusters = [
         Cluster(n_workers=n_workers, vcpus_per_worker=16,
                 mem_mb_per_worker=8192, vcpu_limit=16)
         for _ in range(n_clusters)
     ]
     scheds = [ShabariScheduler(c) for c in clusters]
-    return clusters, Router(clusters, scheds, routing=routing, seed=seed)
+    return clusters, Router(clusters, scheds, routing=routing, seed=seed,
+                            **kwargs)
 
 
 def _saturate(cluster):
@@ -138,6 +145,200 @@ def test_queued_only_when_every_cluster_saturated():
     assert rd.cluster_idx == r.home_cluster("f")
     # counters record placements only — a queued attempt is not a route
     assert r.routed_home == r.spills_warm == r.spills_cold == 0
+
+
+# ------------------------------------------------------ estimate routing
+def test_warming_soon_inside_horizon_is_estimate_target():
+    """A container still warming, with warm_at inside the estimate
+    horizon, is a placement target in estimate mode: the invocation
+    binds to it (Decision.pending) instead of cold-starting a new one."""
+    clusters, r = _mk(routing="estimate", estimate_horizon_s=1.5)
+    home = r.home_cluster("f")
+    c = clusters[home].new_container(
+        clusters[home].workers[0], "f", 4, 512, now=0.0, warm_at=0.2)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == home and not rd.spilled
+    assert rd.decision.pending is c
+    assert rd.decision.container is None and not rd.decision.cold_start
+    # the estimate charges the residual warm-up, not a full cold start
+    assert rd.est_s is not None and rd.est_s < r._cold_estimate(ALLOC) \
+        + DEFAULT_EXEC_ESTIMATE_S
+    assert r.routed_home == 1
+
+
+def test_warming_outside_horizon_is_not_estimate_target():
+    """The same container with warm_at beyond the horizon is invisible:
+    the router cold-starts rather than waiting past its horizon."""
+    clusters, r = _mk(routing="estimate", estimate_horizon_s=1.5)
+    home = r.home_cluster("f")
+    clusters[home].new_container(
+        clusters[home].workers[0], "f", 4, 512, now=0.0, warm_at=5.0)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.decision.pending is None
+    assert rd.decision.cold_start and not rd.decision.queued
+
+
+def test_warming_horizon_boundary():
+    """warm_at exactly at now + horizon still qualifies as a candidate;
+    just past it does not (the predicate is warm_at <= now + horizon).
+    Whether the candidate WINS the route is a separate estimate
+    comparison — here we pin the visibility predicate itself."""
+    cl = Cluster(n_workers=1, vcpus_per_worker=16, mem_mb_per_worker=8192,
+                 vcpu_limit=16)
+    c = cl.new_container(cl.workers[0], "f", 4, 512, now=0.0, warm_at=1.5)
+    assert cl.warming_soon("f", 0.0, 1.5, 4, 512) is c
+    c.warm_at = 1.5001
+    assert cl.warming_soon("f", 0.0, 1.5, 4, 512) is None
+    # already-warm containers belong to idle_warm, not warming_soon
+    c.warm_at = 0.0
+    assert cl.warming_soon("f", 0.0, 1.5, 4, 512) is None
+    assert cl.idle_warm("f", 0.0) == [c]
+
+
+def test_warming_committed_container_never_rebound():
+    """A busy warming container (a cold start already committed to
+    another invocation) is NOT a warming-soon candidate."""
+    clusters, r = _mk(routing="estimate")
+    home = r.home_cluster("f")
+    c = clusters[home].new_container(
+        clusters[home].workers[0], "f", 4, 512, now=0.0, warm_at=0.2)
+    c.busy = True
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.decision.pending is None and rd.decision.cold_start
+
+
+def test_estimate_single_cluster_binds_warming():
+    """Estimate mode does not degenerate at n_clusters=1: a warming
+    container inside the horizon still short-circuits the cold start
+    the single-cluster path would otherwise take."""
+    clusters, r = _mk(n_clusters=1, routing="estimate")
+    c = clusters[0].new_container(
+        clusters[0].workers[0], "f", 4, 512, now=0.0, warm_at=0.2)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == 0 and rd.decision.pending is c
+    assert r.binds_warming == 1
+
+
+def test_warming_soon_fits_checked_per_container():
+    """A soonest-warming container that no longer fits its worker must
+    not hide a later-warming one that does (fits is part of the
+    per-container predicate, not a post-selection filter)."""
+    cl = Cluster(n_workers=1, vcpus_per_worker=16, mem_mb_per_worker=8192,
+                 vcpu_limit=16)
+    w = cl.workers[0]
+    w.acquire(10, 0)  # 6 vCPUs of headroom left
+    cl.new_container(w, "f", 8, 512, now=0.0, warm_at=0.2)   # won't fit
+    fits = cl.new_container(w, "f", 4, 512, now=0.0, warm_at=0.5)
+    assert cl.warming_soon("f", 0.0, 1.5, 4, 512) is fits
+
+
+def test_warming_soon_too_small_is_skipped():
+    """A warming container smaller than the predicted allocation cannot
+    serve the invocation and is not a candidate."""
+    clusters, r = _mk(routing="estimate")
+    home = r.home_cluster("f")
+    clusters[home].new_container(
+        clusters[home].workers[0], "f", 2, 256, now=0.0, warm_at=0.2)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.decision.pending is None and rd.decision.cold_start
+
+
+def test_estimate_prefers_idle_remote_over_contended_home_warm():
+    """The §5 contention term: a warm container on a slammed home worker
+    loses to a remote cold start once slowdown * exec exceeds the
+    cold-start price — the case load-ranked spill-over can never take
+    (it always keeps a local warm hit)."""
+    clusters, r = _mk(routing="estimate", physical_cores=16)
+    home = r.home_cluster("f")
+    remote = 1 - home
+    clusters[home].new_container(
+        clusters[home].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    # calibrate: f runs ~10 s uncontended; home worker is 4x overloaded
+    r.observe_exec("f", 10.0)
+    for w in clusters[home].workers:
+        w.add_active(64.0, 0.0)
+    rd = r.route("f", ALLOC, 1.0)
+    assert rd.spilled and rd.cluster_idx == remote
+    assert rd.decision.cold_start
+    # spill-over, same state: stays home on the warm hit
+    clusters2, r2 = _mk(routing="spill-over", physical_cores=16)
+    clusters2[home].new_container(
+        clusters2[home].workers[0], "f", 4, 512, now=0.0, warm_at=0.0)
+    for w in clusters2[home].workers:
+        w.add_active(64.0, 0.0)
+    assert r2.route("f", ALLOC, 1.0).cluster_idx == home
+
+
+def test_estimate_home_tie_break_and_est_s():
+    """Empty fleet: every cluster estimates the same cold start; the
+    home cluster wins the tie and est_s reports the winning forecast."""
+    clusters, r = _mk(n_clusters=3, routing="estimate")
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.cluster_idx == r.home_cluster("f") and not rd.spilled
+    expected = r._cold_estimate(ALLOC) + r.sched_overhead_s \
+        + r._slowdown(clusters[0].workers[0], "f", ALLOC) \
+        * DEFAULT_EXEC_ESTIMATE_S
+    assert rd.est_s == pytest.approx(expected)
+
+
+def test_estimate_queues_only_when_everything_saturated():
+    clusters, r = _mk(routing="estimate")
+    for cl in clusters:
+        _saturate(cl)
+    rd = r.route("f", ALLOC, 0.0)
+    assert rd.decision.queued and rd.est_s is None
+
+
+def test_observe_exec_ewma_calibration():
+    _, r = _mk(routing="estimate")
+    assert r._exec_estimate("f") == DEFAULT_EXEC_ESTIMATE_S
+    r.observe_exec("f", 4.0)
+    assert r._exec_estimate("f") == pytest.approx(4.0)
+    r.observe_exec("f", 2.0)
+    assert r._exec_estimate("f") == pytest.approx(0.7 * 4.0 + 0.3 * 2.0)
+    r.observe_exec("f", -1.0)  # non-positive observations are ignored
+    assert r._exec_estimate("f") == pytest.approx(0.7 * 4.0 + 0.3 * 2.0)
+
+
+def test_estimate_routing_deterministic_under_fixed_seed():
+    """Two estimate-mode runs of the same seeded scenario — including
+    the online estimator calibration — produce identical metrics."""
+    spec = ScenarioSpec(scenario="multi-cluster", rps=2.0, duration_s=90.0,
+                        seed=5)
+    cfg = SimConfig(**{**MULTI_CFG, "routing": "estimate"})
+    r1 = run_scenario("shabari", spec, sim_cfg=cfg, keep_results=True)
+    r2 = run_scenario("shabari", spec, sim_cfg=cfg)
+    assert r1.summary == r2.summary
+    assert r1.summary["n"] == len(r1.results)
+
+
+def test_estimate_golden_pinned():
+    """SimConfig(routing='estimate') metrics are regression-pinned under
+    tests/goldens/estimate-routing/ (regenerated alongside the main
+    goldens by refresh_goldens.py), independently of the spill-over
+    snapshots the default goldens pin."""
+    from repro.serving.golden import (
+        ATOL,
+        ESTIMATE_ROUTING_SCENARIOS,
+        RTOL,
+        run_golden,
+    )
+    for scenario in ESTIMATE_ROUTING_SCENARIOS:
+        path = os.path.join(
+            os.path.dirname(__file__), "goldens", "estimate-routing",
+            f"{scenario}.json")
+        assert os.path.exists(path), (
+            f"missing estimate-routing snapshot {path}; run "
+            "scripts/refresh_goldens.py")
+        with open(path) as f:
+            want = json.load(f)["summary"]
+        got = run_golden(scenario, estimate_routing=True)
+        assert set(got) == set(want)
+        for key, expect in want.items():
+            assert math.isclose(got[key], expect, rel_tol=RTOL,
+                                abs_tol=ATOL), (
+                f"estimate-routing {scenario}.{key}: got {got[key]!r}, "
+                f"golden {expect!r}")
 
 
 # ------------------------------------------------------- other routings
