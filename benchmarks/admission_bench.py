@@ -15,13 +15,22 @@ the same total worker footprint:
 * ``reserve+shed``  — reservation plus front-door shedding when every
   cluster's committed load exceeds the admission headroom;
 * ``reserve+queue`` — reservation plus front-door queueing under the
-  same condition (arrivals retry without probing any scheduler).
+  same condition (arrivals retry without probing any scheduler);
+* ``reserve+slo``   — reservation plus SLO-native admission: shed
+  exactly the invocations whose best fleet-wide completion-time
+  estimate (per-input when calibrated) already exceeds their remaining
+  SLO budget, instead of shedding on load alone.
 
-The headline A/B (also a CI gate, like sim_bench's retry check):
-truthful reservation accounting must not stack cold starts — p99
-cold-start queueing on ``oversubscribe`` must not be worse than
-legacy's — and must stay SLO-neutral on the uncontended
-``poisson-steady`` control.
+The headline A/Bs (also CI gates, like sim_bench's retry check):
+
+* truthful reservation accounting must not stack cold starts — p99
+  cold-start queueing on ``oversubscribe`` must not be worse than
+  legacy's — and must stay SLO-neutral on the uncontended
+  ``poisson-steady`` control;
+* SLO-native admission must DOMINATE load-headroom shedding on at
+  least one saturating cell — no more violations from no more sheds
+  (it drops only work that was doomed anyway) — and must stay neutral
+  on the half-load control (shed nothing, change nothing).
 
   PYTHONPATH=src python -m benchmarks.admission_bench
 """
@@ -58,12 +67,25 @@ SCENARIOS = {
     "poisson-steady": ({}, 0.5),
 }
 
+# the load-shedding arm the slo-dominance gate compares against: a
+# tighter headroom than the default arm so its shed rate brackets
+# reserve+slo's from above — the gate then reads "fewer violations
+# from no more sheds" at a MATCHED (or conceded) shed rate, not a win
+# bought by simply serving more traffic
+MATCH_HEADROOM = 0.90
+
 MODES = (
     ("legacy", dict(legacy_acquire=True)),
     ("reserve", dict()),
     ("reserve+shed", dict(admission="shed", admission_headroom=HEADROOM)),
+    ("reserve+shed@match", dict(admission="shed",
+                                admission_headroom=MATCH_HEADROOM)),
     ("reserve+queue", dict(admission="queue", admission_headroom=HEADROOM)),
+    ("reserve+slo", dict(admission="slo")),
 )
+# the cells the slo-dominates-shed gate quantifies over (the control is
+# gated separately, for neutrality)
+SATURATING = ("oversubscribe", "flash-crowd", "multi-cluster")
 
 
 def _cfg(**overrides) -> SimConfig:
@@ -140,6 +162,7 @@ def run() -> None:
                 f"|timeout_pct={summary['timeout_pct']:.2f}"
                 f"|shed_pct={summary['shed_pct']:.2f}"
                 f"|admission_shed={router.admission_shed}"
+                f"|admission_slo_shed={router.admission_slo_shed}"
                 f"|admission_queue_events={router.admission_queue_events}",
             )
 
@@ -172,6 +195,44 @@ def run() -> None:
             "acquire-on-placement raised SLO violations on the "
             f"poisson-steady control: {steady_reserve['slo_violation_pct']:.2f}% "
             f"> {steady_legacy['slo_violation_pct']:.2f}%")
+
+    # CI gates for SLO-native admission. Dominance: on at least one
+    # saturating cell, reserve+slo must beat the matched-shed-rate
+    # load-headroom arm on SLO violations WITHOUT shedding more —
+    # load-headroom shedding drops arrivals blindly when the fleet
+    # looks full, so an estimate that sheds only doomed work should
+    # serve more and violate less
+    dominated = [
+        s for s in SATURATING
+        if (cells[(s, "reserve+slo")]["slo_violation_pct"]
+            < cells[(s, "reserve+shed@match")]["slo_violation_pct"] - 1e-9
+            and cells[(s, "reserve+slo")]["shed_pct"]
+            <= cells[(s, "reserve+shed@match")]["shed_pct"] + 1e-9)
+    ]
+    if not dominated:
+        raise RuntimeError(
+            "slo admission failed to dominate load-headroom shedding "
+            "(fewer violations from no more sheds) on any saturating "
+            "cell: " + ", ".join(
+                f"{s}: slo {cells[(s, 'reserve+slo')]['slo_violation_pct']:.2f}%"
+                f"/{cells[(s, 'reserve+slo')]['shed_pct']:.2f}% shed vs "
+                f"shed@match "
+                f"{cells[(s, 'reserve+shed@match')]['slo_violation_pct']:.2f}%"
+                f"/{cells[(s, 'reserve+shed@match')]['shed_pct']:.2f}% shed"
+                for s in SATURATING))
+    # Neutrality: on the half-load control the estimate clears every
+    # SLO, so slo admission must shed nothing and change nothing
+    steady_slo = cells[("poisson-steady", "reserve+slo")]
+    if steady_slo["shed_pct"] > 0.0:
+        raise RuntimeError(
+            "slo admission shed servable work on the half-load "
+            f"poisson-steady control: shed_pct={steady_slo['shed_pct']:.2f}%")
+    if (steady_slo["slo_violation_pct"]
+            > steady_reserve["slo_violation_pct"] + 0.5):
+        raise RuntimeError(
+            "slo admission raised SLO violations on the poisson-steady "
+            f"control: {steady_slo['slo_violation_pct']:.2f}% > "
+            f"{steady_reserve['slo_violation_pct']:.2f}%")
 
 
 if __name__ == "__main__":

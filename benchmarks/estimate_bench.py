@@ -14,6 +14,11 @@ on three saturating shapes (flash-crowd, oversubscribe, multi-cluster)
 behind a 2-cluster front door, plus a half-load poisson-steady control
 where any routing policy should be near-neutral.
 
+The ``estimate-ewma`` variant runs the same minimum-ECT routing with
+the per-input regressor disabled (``estimate_features=False``) — the
+PR 5 input-blind EWMA estimator — so the sweep separates what the ECT
+*ranking* buys from what the *per-input* forecast buys on top of it.
+
 CI gates (mirroring admission_bench's):
 
 * ``estimate`` must BEAT ``spill-over`` on SLO-violation % in at least
@@ -21,16 +26,28 @@ CI gates (mirroring admission_bench's):
   degrades the estimator to load-ranking fails here;
 * ``estimate`` must stay SLO-neutral (within 0.5 pts of spill-over) on
   the half-load control — a forecaster that helps under saturation must
-  not tax the common case.
+  not tax the common case;
+* the per-input forecast must BEAT the input-blind EWMA on one-step-
+  ahead accuracy over the ``heavy-tail-inputs`` cell's completion
+  stream — the input distribution that motivates per-input estimation
+  in the first place. Accuracy (median |log(pred/actual)| on identical
+  completions, scored before each observation trains either estimator)
+  is the right yardstick here because under that cell's deep
+  saturation few invocations complete at all, so end-to-end violation
+  deltas between estimators sit inside shed/timeout noise.
 
   PYTHONPATH=src python -m benchmarks.estimate_bench
 """
 
 from __future__ import annotations
 
+import math
 import time
 
+import numpy as np
+
 from benchmarks.util import QUICK, emit
+from repro.core.ect import ECT_WARMUP_OBS
 from repro.serving import baselines as B
 from repro.serving.experiment import make_policy
 from repro.serving.profiles import build_input_pool, build_profiles
@@ -42,10 +59,18 @@ N_CLUSTERS = 2
 DURATION_S = 240.0 if QUICK else 360.0
 RPS = 1.0 if QUICK else 2.0  # offered load scales with the fleet
 POLICY = "shabari"
-ROUTINGS = ("hashing", "spill-over", "estimate")
+# label -> SimConfig overrides; estimate-ewma is the A/B arm with the
+# per-input regressor off (EWMA-only ECT, the PR 5 estimator)
+ROUTINGS = (
+    ("hashing", dict(routing="hashing")),
+    ("spill-over", dict(routing="spill-over")),
+    ("estimate", dict(routing="estimate")),
+    ("estimate-ewma", dict(routing="estimate", estimate_features=False)),
+)
 # the cells the beats-spill-over gate quantifies over (the control is
 # gated separately, for neutrality)
-SATURATING = ("flash-crowd", "oversubscribe", "multi-cluster")
+SATURATING = ("flash-crowd", "oversubscribe", "multi-cluster",
+              "heavy-tail-inputs")
 
 # Each entry: (scenario params, rps scale) — router_bench's loads: the
 # HOT cluster saturates while total capacity still suffices, the regime
@@ -58,6 +83,10 @@ SCENARIOS = {
     "flash-crowd": ({"spike_mult": 4.0}, 1.0),
     "oversubscribe": ({"load_mult": 1.6}, 1.0),
     "multi-cluster": ({}, 1.0),
+    # saturating AND input-skewed: per-invocation exec times spread far
+    # around each function's mean, the regime where a per-input forecast
+    # separates from the EWMA (gate 3)
+    "heavy-tail-inputs": ({"skew": 3.0}, 2.0),
     "poisson-steady": ({}, 0.5),
 }
 # a DIFFERENT trace seed than router_bench's (seed 0): its c2 cells use
@@ -67,14 +96,13 @@ SCENARIOS = {
 TRACE_SEED = 1
 
 
-def _cfg(routing: str) -> SimConfig:
+def _cfg(**overrides) -> SimConfig:
     # vcpu_limit > physical_cores (the §6 userCPU knob): placements
     # translate into co-runner contention, which is exactly the signal
     # the estimate's §5 slowdown term is supposed to price in
     return SimConfig(
         n_workers=TOTAL_WORKERS // N_CLUSTERS,
         n_clusters=N_CLUSTERS,
-        routing=routing,
         vcpus_per_worker=44,
         physical_cores=32,
         mem_mb_per_worker=16 * 1024,
@@ -82,18 +110,52 @@ def _cfg(routing: str) -> SimConfig:
         retry_interval_s=1.0,
         queue_timeout_s=60.0,
         seed=0,
+        **overrides,
     )
 
 
-def _run_cell(trace, profiles, pool, slo_table, routing):
+def _run_cell(trace, profiles, pool, slo_table, overrides):
     policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
     sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
-                    slo_table=slo_table, cfg=_cfg(routing))
+                    slo_table=slo_table, cfg=_cfg(**overrides))
     t0 = time.perf_counter()
     summary = summarize(sim.run(trace))
     wall = time.perf_counter() - t0
     eps = sim.events_processed / wall
     return summary, sim.router, eps
+
+
+def _estimator_accuracy(trace, profiles, pool, slo_table):
+    """One-step-ahead |log(pred/actual)| of the per-input forecast vs
+    the EWMA over one run's completion stream, scored inside the
+    calibration hook BEFORE each observation trains either estimator
+    (so neither is graded on a point it has already seen) and only once
+    the regressor is past warm-up (before that the two predictions are
+    identical by construction)."""
+    policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=_cfg(routing="estimate"))
+    router = sim.router
+    errs_feat, errs_ewma = [], []
+    orig = router.observe_exec
+
+    def tap(function, base_exec_s, net_gbps=0.0, *, features=None,
+            input_mb=None):
+        if (base_exec_s > 0.0 and features is not None
+                and router._ect.observations(function) >= ECT_WARMUP_OBS
+                and function in router._exec_ewma):
+            pred = router._exec_estimate(function, features, input_mb)
+            errs_feat.append(abs(math.log(pred / base_exec_s)))
+            errs_ewma.append(
+                abs(math.log(router._exec_ewma[function] / base_exec_s)))
+        orig(function, base_exec_s, net_gbps, features=features,
+             input_mb=input_mb)
+
+    router.observe_exec = tap
+    sim.run(trace)
+    return (float(np.median(errs_feat)) if errs_feat else 0.0,
+            float(np.median(errs_ewma)) if errs_ewma else 0.0,
+            len(errs_feat))
 
 
 def run() -> None:
@@ -102,6 +164,7 @@ def run() -> None:
     slo_table = B.build_slo_table(profiles, pool)
 
     cells = {}
+    traces = {}
     warmed = False
     for scenario, (params, rps_scale) in SCENARIOS.items():
         spec = ScenarioSpec(scenario=scenario, rps=RPS * rps_scale,
@@ -111,18 +174,19 @@ def run() -> None:
             spec, functions=sorted(profiles),
             inputs_per_function={f: len(pool[f]) for f in profiles},
         )
+        traces[scenario] = trace
         if not warmed:
             # throwaway run: trace shabari's jit kernels so the one-time
             # compiles aren't charged to the first timed cell
             _run_cell(trace[: max(len(trace) // 4, 1)],
-                      profiles, pool, slo_table, "spill-over")
+                      profiles, pool, slo_table, dict(routing="spill-over"))
             warmed = True
-        for routing in ROUTINGS:
+        for label, overrides in ROUTINGS:
             summary, router, eps = _run_cell(
-                trace, profiles, pool, slo_table, routing)
-            cells[(scenario, routing)] = summary
+                trace, profiles, pool, slo_table, overrides)
+            cells[(scenario, label)] = summary
             emit(
-                f"estimate_bench.{scenario}.{routing}",
+                f"estimate_bench.{scenario}.{label}",
                 1e6 / max(eps, 1e-9),
                 f"n={len(trace)}"
                 f"|events_per_sec={eps:.0f}"
@@ -172,6 +236,24 @@ def run() -> None:
             "estimate routing raised SLO violations on the half-load "
             f"poisson-steady control: {ctrl_est['slo_violation_pct']:.2f}% "
             f"> {ctrl_spill['slo_violation_pct']:.2f}%")
+
+    # CI gate 3: the per-input regressor must beat the input-blind EWMA
+    # on one-step-ahead accuracy where the inputs are the story —
+    # skewed sizes under saturation
+    err_feat, err_ewma, n_scored = _estimator_accuracy(
+        traces["heavy-tail-inputs"], profiles, pool, slo_table)
+    emit(
+        "estimate_bench.heavy-tail-inputs.feature_gain",
+        0.0,
+        f"median_abs_log_err_feature={err_feat:.3f}"
+        f"|median_abs_log_err_ewma={err_ewma:.3f}"
+        f"|n_scored={n_scored}",
+    )
+    if n_scored == 0 or err_feat >= err_ewma - 1e-9:
+        raise RuntimeError(
+            "per-input ECT features failed to beat the EWMA estimator on "
+            f"heavy-tail-inputs: median |log err| {err_feat:.3f} >= "
+            f"{err_ewma:.3f} (n={n_scored})")
 
 
 if __name__ == "__main__":

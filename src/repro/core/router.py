@@ -52,28 +52,56 @@ warm-up window and arrivals inside that ~0.5-1 s window no longer herd
 onto the same least-loaded remote (the old acquire-on-start behavior is
 kept behind ``SimConfig(legacy_acquire=True)`` for A/B).
 
-On top of that signal the router applies fleet-wide ADMISSION CONTROL:
-when every cluster's committed load (running + reserved) exceeds the
-``admission_headroom`` occupancy fraction, new arrivals are either shed
-at the front door (``admission="shed"``) or held in the front-door
-queue without probing any scheduler (``admission="queue"``); the
-default ``admission="none"`` admits everything and lets per-cluster
-queueing absorb overload, as before.
+On top of that signal the router applies front-door ADMISSION CONTROL:
+
+* ``admission="shed"`` / ``"queue"`` — the load-headroom test: when
+  every cluster's committed load (running + reserved) exceeds the
+  ``admission_headroom`` occupancy fraction, new arrivals are shed at
+  the front door or held in the front-door queue without probing any
+  scheduler;
+* ``admission="slo"`` — the SLO-native test: instead of fleet-wide
+  load, compute the MINIMUM completion-time estimate across clusters
+  (the same ``_estimate`` scoring estimate routing uses, so it works
+  under any routing policy) and shed exactly the invocations whose
+  best estimate already exceeds their remaining SLO budget — work that
+  cannot be served in time no matter where it lands, which the
+  load-headroom test cannot distinguish from servable work. Functions
+  with no calibration yet are always admitted (never shed on the bare
+  prior);
+* the default ``admission="none"`` admits everything and lets
+  per-cluster queueing absorb overload, as before.
+
+The exec estimate behind both the scoring and the SLO test is
+PER-INPUT when the caller supplies the invocation's feature vector
+(``route(..., features=..., input_mb=...)``): observed completions
+train a per-function online regressor (:mod:`repro.core.ect`) over the
+Featurizer output + input size, with the per-function EWMA as the cold
+prior. ``estimate_features=False`` restores the input-blind EWMA-only
+estimator for A/B.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import random
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster, Worker
+from repro.core.ect import (
+    ECT_BLIND_SHED_BAND,
+    ECT_ERR_WIDEN,
+    ECT_SHED_OBS,
+    ECT_SLO_MARGIN,
+    ECT_WARMUP_OBS,
+    ECTRegressor,
+)
 from repro.core.scheduler import Decision, ShabariScheduler
 
 ROUTING_POLICIES = ("hashing", "spill-over", "estimate", "random")
-ADMISSION_POLICIES = ("none", "shed", "queue")
+ADMISSION_POLICIES = ("none", "shed", "queue", "slo")
 
 # estimate-mode calibration: EWMA smoothing for observed per-function
 # exec times, and the prior used before the first observation (seconds)
@@ -110,6 +138,7 @@ class Router:
         physical_cores: int = 96,
         nic_gbps: float = 10.0,
         network_fed: Optional[Callable[[str], bool]] = None,
+        estimate_features: bool = True,
     ):
         assert routing in ROUTING_POLICIES, routing
         assert admission in ADMISSION_POLICIES, admission
@@ -140,9 +169,19 @@ class Router:
         self.network_fed = network_fed
         # per-function EWMAs of observed UNCONTENDED exec seconds and
         # object-store NIC draw — the calibration state behind
-        # _exec_estimate/_slowdown (fed by observe_exec)
+        # _exec_estimate/_slowdown (fed by observe_exec). The exec EWMA
+        # doubles as the cold prior (and clamp anchor) for the
+        # per-input regressor below.
         self._exec_ewma: Dict[str, float] = {}
         self._net_ewma: Dict[str, float] = {}
+        # per-function completion counts behind the EWMAs — admission
+        # ("slo") refuses to shed on estimates younger than ECT_SHED_OBS
+        self._exec_obs: Dict[str, int] = {}
+        # per-input exec estimation: a per-function online regressor
+        # over the invocation's feature vector (repro.core.ect);
+        # estimate_features=False keeps the EWMA-only estimator for A/B
+        self.estimate_features = estimate_features
+        self._ect = ECTRegressor()
         self._rng = random.Random(seed)
         # per-cluster vCPU capacity is fixed for the cluster's lifetime
         self._capacity = [
@@ -157,6 +196,9 @@ class Router:
         # (counted IN ADDITION to routed_home/spills_warm)
         self.binds_warming = 0
         self.admission_shed = 0  # arrivals rejected at the front door
+        # the admission="slo" slice of admission_shed: invocations whose
+        # best completion-time estimate exceeded their SLO budget
+        self.admission_slo_shed = 0
         # queue-mode rejections count EVENTS, not arrivals: a held
         # arrival re-enters route() on every retry and increments this
         # each time (the router cannot tell a retry from a new arrival)
@@ -195,7 +237,8 @@ class Router:
 
     # ------------------------------------------------- estimate scoring
     def observe_exec(self, function: str, base_exec_s: float,
-                     net_gbps: float = 0.0) -> None:
+                     net_gbps: float = 0.0, *, features=None,
+                     input_mb: Optional[float] = None) -> None:
         """Estimator calibration hook: the runtime reports each
         completion's UNCONTENDED execution time (seconds; the §5
         contention factor already divided out, so candidate scoring can
@@ -203,9 +246,12 @@ class Router:
         and its object-store NIC draw (Gbps; 0 for non-network-fed
         functions). Both fold into per-function EWMAs
         (``EXEC_EWMA_ALPHA``); functions with no observation yet use
-        ``DEFAULT_EXEC_ESTIMATE_S`` / zero draw. The feed is
-        deterministic given the event order, so estimate-mode runs stay
-        reproducible under a fixed seed."""
+        ``DEFAULT_EXEC_ESTIMATE_S`` / zero draw. When the caller also
+        supplies the invocation's feature vector (+ input MB), the
+        observation additionally trains the per-input regressor
+        (:mod:`repro.core.ect`) unless ``estimate_features`` is off.
+        The feed is deterministic given the event order, so
+        estimate-mode runs stay reproducible under a fixed seed."""
         if base_exec_s <= 0.0:
             return
         prev = self._exec_ewma.get(function)
@@ -213,33 +259,56 @@ class Router:
             base_exec_s if prev is None
             else (1.0 - EXEC_EWMA_ALPHA) * prev + EXEC_EWMA_ALPHA * base_exec_s
         )
+        self._exec_obs[function] = self._exec_obs.get(function, 0) + 1
         prev_net = self._net_ewma.get(function)
         self._net_ewma[function] = (
             net_gbps if prev_net is None
             else (1.0 - EXEC_EWMA_ALPHA) * prev_net
             + EXEC_EWMA_ALPHA * net_gbps
         )
+        if self.estimate_features and features is not None:
+            # train on the residual off the pre-update EWMA (first
+            # observation: off itself, a zero residual)
+            self._ect.observe(function, features,
+                              input_mb if input_mb is not None else 0.0,
+                              base_exec_s,
+                              prev if prev is not None else base_exec_s)
 
-    def _exec_estimate(self, function: str) -> float:
-        return self._exec_ewma.get(function, DEFAULT_EXEC_ESTIMATE_S)
+    def _exec_estimate(self, function: str, features=None,
+                       input_mb: Optional[float] = None) -> float:
+        """Per-function exec forecast: the per-input regressor when it
+        is trained and the caller supplied this invocation's features,
+        else the EWMA (also the regressor's cold prior and clamp
+        anchor); ``DEFAULT_EXEC_ESTIMATE_S`` before any observation."""
+        prior = self._exec_ewma.get(function, DEFAULT_EXEC_ESTIMATE_S)
+        if self.estimate_features and features is not None:
+            est = self._ect.predict(
+                function, features,
+                input_mb if input_mb is not None else 0.0, prior)
+            if est is not None:
+                return est
+        return prior
 
     def _cold_estimate(self, alloc: Allocation) -> float:
         """Mean-field cold-start latency for the predicted container
         size (the simulator's curve without its lognormal jitter)."""
         return self.cold_base_s + self.cold_per_gb_s * alloc.mem_mb / 1024.0
 
-    def _slowdown(self, w: Worker, function: str, alloc: Allocation) -> float:
+    def _slowdown(self, w: Worker, function: str, vcpus: float) -> float:
         """Forecast §5 contention on ``w`` if this invocation lands
         there: CPU slowdown from active parallel demand plus our own
-        allocation (an upper bound on the function's true demand), NIC
-        slowdown from current object-store draw plus our own calibrated
-        draw (the net EWMA; the runtime charges the arriving
-        invocation's draw too, so the forecast must or it would
-        systematically understate busy-NIC placements) for network-fed
-        functions. O(1) — reads the worker's incremental aggregates."""
+        footprint (``vcpus`` — the size the invocation will actually
+        RUN at, i.e. the bound container's size for warm/warming binds,
+        which case-(2) can make larger than the request; an upper bound
+        on the function's true demand), NIC slowdown from current
+        object-store draw plus our own calibrated draw (the net EWMA;
+        the runtime charges the arriving invocation's draw too, so the
+        forecast must or it would systematically understate busy-NIC
+        placements) for network-fed functions. O(1) — reads the
+        worker's incremental aggregates."""
         cpu = max(
             1.0,
-            (w.active_demand_vcpus + float(alloc.vcpus)) / self.physical_cores,
+            (w.active_demand_vcpus + float(vcpus)) / self.physical_cores,
         )
         net = 1.0
         if self.network_fed is not None and self.network_fed(function):
@@ -248,7 +317,9 @@ class Router:
         return max(cpu, net)
 
     def _estimate(self, ci: int, function: str, alloc: Allocation,
-                  now: float) -> Tuple[float, str, object]:
+                  now: float, features=None,
+                  input_mb: Optional[float] = None
+                  ) -> Tuple[float, str, object]:
         """Estimated completion time if cluster ``ci`` served this
         invocation, as ``(est_s, kind, payload)`` with kind one of
         ``"warm"`` / ``"warming"`` / ``"cold"`` / ``"queue"``.
@@ -259,14 +330,17 @@ class Router:
         returned with an infinite estimate — the route pass never binds
         to a cluster that cannot place."""
         cl = self.clusters[ci]
-        exec_est = self._exec_estimate(function)
+        exec_est = self._exec_estimate(function, features, input_mb)
         # (a) warm container usable now — the EXACT container scheduler
         # cases (1)/(2) would bind, so the contention forecast prices
-        # the worker that will actually serve the invocation
+        # the worker that will actually serve the invocation. The
+        # slowdown is priced with the CONTAINER's size, not the
+        # request's: the runtime runs the invocation at c.vcpus, which
+        # a case-(2) bind can make larger than alloc.vcpus
         c = self.schedulers[ci].warm_candidate(function, alloc.vcpus,
                                                alloc.mem_mb, now)
         if c is not None:
-            slow = self._slowdown(c.worker, function, alloc)
+            slow = self._slowdown(c.worker, function, c.vcpus)
             return (self.sched_overhead_s + slow * exec_est, "warm", c)
         # (b)/(c) no warm container: compare binding to a warming-soon
         # container (pay the residual warm-up) against this cluster's
@@ -279,14 +353,17 @@ class Router:
                             alloc.vcpus, alloc.mem_mb)
         warming_est = None
         if c is not None:
-            slow = self._slowdown(c.worker, function, alloc)
+            # like the warm case, a warming bind runs at the container's
+            # size (warming_soon only returns >= alloc candidates)
+            slow = self._slowdown(c.worker, function, c.vcpus)
             warming_est = ((c.warm_at - now) + self.sched_overhead_s
                            + slow * exec_est)
         w = self.schedulers[ci].cold_candidate(function, alloc.vcpus,
                                                alloc.mem_mb)
         cold_est = None
         if w is not None:
-            slow = self._slowdown(w, function, alloc)
+            # cold starts create an exact-size container
+            slow = self._slowdown(w, function, alloc.vcpus)
             cold_est = (self._cold_estimate(alloc) + self.sched_overhead_s
                         + slow * exec_est)
         if warming_est is not None and (cold_est is None
@@ -300,7 +377,8 @@ class Router:
         return (float("inf"), "queue", None)
 
     def _route_estimate(self, function: str, alloc: Allocation,
-                        now: float) -> RouteDecision:
+                        now: float, features=None,
+                        input_mb: Optional[float] = None) -> RouteDecision:
         """Minimum-ECT routing: score every cluster, bind the winner.
         Ties break toward the home cluster (warm-pool locality is free
         tie insurance), then the lower cluster index — fully
@@ -309,7 +387,8 @@ class Router:
         home = self.home_cluster(function)
         best = None
         for ci in range(n):
-            est, kind, payload = self._estimate(ci, function, alloc, now)
+            est, kind, payload = self._estimate(ci, function, alloc, now,
+                                                features, input_mb)
             if kind == "queue":
                 continue
             key = (est, ci != home, ci)
@@ -367,10 +446,101 @@ class Router:
             self.routed_home += 1
         return RouteDecision(ci, d, spilled=spilled, est_s=est)
 
+    def _slo_reject(self, function: str, alloc: Allocation, now: float,
+                    slo_s: float, features, input_mb) -> bool:
+        """SLO-native admission test (``admission="slo"``): shed exactly
+        the invocations whose BEST completion-time estimate across the
+        fleet already exceeds ``slo_s`` (the invocation's REMAINING SLO
+        budget — callers subtract time already spent queueing). A
+        non-positive budget is an unconditional shed: the SLO is missed
+        no matter what, so running (or retrying) the invocation can
+        only waste capacity. Functions with no calibration are always
+        admitted — never shed on the bare prior — and an infinite
+        estimate (nothing can be placed RIGHT NOW) falls through to
+        normal queue/retry, which may still serve the invocation in
+        time.
+
+        The min-ECT here is the invocation's IRREDUCIBLE completion
+        time: scheduling overhead plus the per-input exec estimate
+        under the least-contended worker's §5 slowdown anywhere in the
+        fleet. Situational latencies — cold starts, queueing — are
+        deliberately NOT charged: a first arrival that must cold-start
+        may well blow a tight SLO, but the container it warms is what
+        makes every successor servable, so shedding on cold-start
+        latency starves the warm pool and cascades (each shed prevents
+        the warming that would have admitted the next arrival).
+        Violations the situational latency causes are charged to the
+        invocation that pays them, exactly as under every other
+        admission mode.
+
+        The shed threshold also tracks the ESTIMATE's uncertainty. An
+        input-blind estimate (the EWMA, or a just-warmed regressor
+        still predicting near its prior) forecasts the MEAN over an
+        input distribution whose per-input SLOs track per-input exec
+        times, so shedding at the mean would drop every small-input
+        invocation of a high-variance function — exactly the servable
+        work this mode exists to protect. A shed is also irreversible
+        (the work is dropped), so estimates earn shedding rights only
+        as their specific failure modes are ruled out, via two bands:
+
+        * a MATURE input-blind estimate (``ECT_SHED_OBS`` completions —
+          a few heavy first draws hold the early EWMA an order of
+          magnitude above steady state) sheds past
+          ``ECT_BLIND_SHED_BAND`` x the budget — beyond the whole
+          multiplicative band the input distribution can occupy around
+          its mean, the work is doomed whatever the input turns out to
+          be;
+        * a trained per-input forecast that ACTIVELY flags the input
+          as heavier than the prior (prediction above the EWMA — the
+          model has learned something this-input-specific, not merely
+          echoed the mean) sheds past the much tighter
+          ``ECT_SLO_MARGIN`` x band, which is where the heavy-tail
+          capacity savings come from. The band widens with the
+          regressor's own measured one-step-ahead log error
+          (``ECT_ERR_WIDEN``): model accuracy is function-specific, and
+          a function the features do not explain must not shed on
+          confident-looking mispredictions."""
+        if slo_s <= 0.0:
+            return True
+        prior = self._exec_ewma.get(function)
+        if prior is None:
+            return False
+        per_input = (self.estimate_features and features is not None
+                     and self._ect.observations(function) >= ECT_WARMUP_OBS)
+        exec_est = self._exec_estimate(function, features, input_mb)
+        best = min(
+            self._slowdown(w, function, alloc.vcpus)
+            for cl in self.clusters for w in cl.workers
+        )
+        est = self.sched_overhead_s + best * exec_est
+        if (self._exec_obs.get(function, 0) >= ECT_SHED_OBS
+                and est > slo_s * ECT_BLIND_SHED_BAND):
+            return True
+        margin = ECT_SLO_MARGIN * math.exp(
+            ECT_ERR_WIDEN * self._ect.log_error(function))
+        return (per_input and exec_est > prior
+                and est > slo_s * margin)
+
     # ------------------------------------------------------------ route
-    def route(self, function: str, alloc: Allocation, now: float) -> RouteDecision:
+    def route(self, function: str, alloc: Allocation, now: float, *,
+              features=None, input_mb: Optional[float] = None,
+              slo_s: Optional[float] = None) -> RouteDecision:
+        """Place one invocation. ``features``/``input_mb`` are the
+        invocation's already-computed feature vector + input size (the
+        policy's ``aux`` cache) — optional; without them every estimate
+        falls back to the per-function EWMA. ``slo_s`` is the remaining
+        SLO budget, read only by ``admission="slo"``."""
         n = len(self.clusters)
-        if self._admission_reject():
+        if self.admission == "slo":
+            if slo_s is not None and self._slo_reject(
+                    function, alloc, now, slo_s, features, input_mb):
+                home = 0 if n == 1 else self.home_cluster(function)
+                rejected = Decision(None, cold_start=False,
+                                    background_launch=None, queued=True)
+                self.admission_shed += 1
+                self.admission_slo_shed += 1
+                return RouteDecision(home, rejected, shed=True)
+        elif self._admission_reject():
             home = 0 if n == 1 else self.home_cluster(function)
             rejected = Decision(None, cold_start=False, background_launch=None,
                                 queued=True)
@@ -382,7 +552,8 @@ class Router:
         if self.routing == "estimate":
             # does NOT degenerate at n == 1: warming-soon binding still
             # short-circuits single-cluster cold starts
-            return self._route_estimate(function, alloc, now)
+            return self._route_estimate(function, alloc, now,
+                                        features, input_mb)
         if n == 1:
             d = self.schedulers[0].schedule(function, alloc, now)
             if not d.queued:

@@ -139,14 +139,30 @@ class SimConfig:
     # is warm), under which arrivals inside the warm-up window see a
     # free-looking worker and stack cold starts onto it.
     legacy_acquire: bool = False
-    # Router-level admission control under fleet-wide overload: when
-    # EVERY cluster's committed load exceeds admission_headroom,
-    # "shed" drops the arrival at the front door (recorded as a shed
-    # result, an SLO violation), "queue" holds it in the front-door
-    # retry queue without probing any scheduler, and "none" (default)
-    # admits everything, as before.
+    # Router-level admission control. The load-headroom modes act under
+    # fleet-wide overload — when EVERY cluster's committed load exceeds
+    # admission_headroom, "shed" drops the arrival at the front door
+    # (recorded as a shed result, an SLO violation) and "queue" holds
+    # it in the front-door retry queue without probing any scheduler.
+    # "slo" is the SLO-native mode: ignore load headroom and instead
+    # shed exactly the invocations whose minimum completion-time
+    # estimate across clusters already exceeds their remaining SLO
+    # budget — work that cannot be served in time no matter where it
+    # lands (uncalibrated functions are always admitted). "none"
+    # (default) admits everything, as before.
     admission: str = "none"
     admission_headroom: float = 0.95
+    # Per-input exec estimation (the tentpole of the SLO-native PR):
+    # when True (default), the feature vector + input size a policy
+    # caches in its retry aux (the Featurizer output ShabariPolicy
+    # already computes) feed the router's per-function online regressor
+    # (repro.core.ect), so estimate routing and SLO admission see
+    # heavy-tail inputs coming instead of forecasting the EWMA mean for
+    # every invocation. False restores the input-blind EWMA-only
+    # estimator for A/B (benchmarks/estimate_bench). Policies that
+    # cache no features (the static/offline baselines) always use the
+    # EWMA path regardless.
+    estimate_features: bool = True
 
 
 @dataclasses.dataclass
@@ -235,6 +251,11 @@ class _Running:
     # uncontended exec seconds sampled at start — fed to the router's
     # estimator calibration (Router.observe_exec) at finish
     base_exec: float = 0.0
+    # the invocation's feature vector + input MB (from the policy's aux
+    # cache), carried to finish so calibration trains the per-input
+    # regressor on the SAME vector the allocation saw
+    features: Optional[object] = None
+    input_mb: Optional[float] = None
     # dynamic-contention bookkeeping: seconds of uncontended work left,
     # the slowdown currently applied, when it was last re-evaluated, and
     # a generation counter that invalidates superseded finish events.
@@ -297,6 +318,7 @@ class Simulator:
             routing=self.cfg.routing, seed=self.cfg.seed,
             admission=self.cfg.admission,
             admission_headroom=self.cfg.admission_headroom,
+            estimate_features=self.cfg.estimate_features,
             # estimate-mode model parameters: the router forecasts with
             # the same cold-start curve, scheduling overhead, and §5
             # contention constants this simulator charges
@@ -362,6 +384,18 @@ class Simulator:
         bits = input_size_mb(fn, meta) * 8e6
         return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
 
+    def _aux_features(self, aux) -> Tuple[Optional[object], Optional[float]]:
+        """The (feature vector, input MB) pair a policy caches in its
+        retry aux (ShabariPolicy and subclasses; the static/offline
+        baselines cache nothing) — the per-input signal threaded into
+        Router.route/observe_exec. Returns (None, None) when the policy
+        caches no features or SimConfig(estimate_features=False) turned
+        the per-input estimator off."""
+        if (self.cfg.estimate_features and isinstance(aux, tuple)
+                and len(aux) == 2 and isinstance(aux[0], np.ndarray)):
+            return aux[0], float(aux[1])
+        return None, None
+
     # ------------------------------------------------------------ handlers
     def _record_terminal(self, arrival: Arrival, alloc, first_seen: float,
                          *, timed_out: bool = False,
@@ -402,7 +436,14 @@ class Simulator:
         if alloc is None:
             alloc, aux = self.policy.allocate_with_aux(arrival, meta, self, aux)
 
-        route = self.router.route(arrival.function, alloc, now)
+        # per-input ECT + SLO-native admission: the router sees the
+        # invocation's cached features and its REMAINING SLO budget
+        # (queueing already spent counts against it on retries)
+        feats, in_mb = self._aux_features(aux)
+        slo_s = self.slo_table[(arrival.function, arrival.input_idx)]
+        route = self.router.route(arrival.function, alloc, now,
+                                  features=feats, input_mb=in_mb,
+                                  slo_s=slo_s - (now - first_seen))
         decision = route.decision
         if route.shed:
             # admission control dropped it at the front door: no retry
@@ -429,7 +470,8 @@ class Simulator:
                 c.worker.reserve(c.vcpus, c.mem_mb)
                 c.reserved = True
             self._push(c.warm_at, "warm_start",
-                       (arrival, meta, alloc, c, c.warm_at - now, first_seen))
+                       (arrival, meta, alloc, c, c.warm_at - now, first_seen,
+                        aux))
             return
 
         cluster = self.clusters[route.cluster_idx]
@@ -444,7 +486,7 @@ class Simulator:
 
         if decision.container is not None:
             self._start(arrival, meta, alloc, decision.container,
-                        cold=False, first_seen=first_seen)
+                        cold=False, first_seen=first_seen, aux=aux)
         else:
             # cold start: create the container, start when warm
             w, v, m = decision.background_launch
@@ -460,7 +502,7 @@ class Simulator:
                 c.reserved = True
             self._note_size(arrival.function, v, m)
             self._push(now + lat, "warm_start",
-                       (arrival, meta, alloc, c, lat, first_seen))
+                       (arrival, meta, alloc, c, lat, first_seen, aux))
 
     def _note_size(self, fn: str, v: int, m: int) -> None:
         self.container_sizes.setdefault(fn, set()).add((v, m))
@@ -478,7 +520,8 @@ class Simulator:
         self._record_terminal(arrival, alloc, first_seen, timed_out=True)
 
     def _start(self, arrival, meta, alloc, container: Container, *, cold: bool,
-               first_seen: float, cold_latency: float = 0.0) -> None:
+               first_seen: float, cold_latency: float = 0.0,
+               aux=None) -> None:
         now = self.now
         fn = arrival.function
         prof = self.profiles[fn]
@@ -517,10 +560,11 @@ class Simulator:
             queued_s=now - first_seen - (cold_latency if cold else 0.0),
             oom_killed=oom, exec_s=exec_s,
         )
+        feats, in_mb = self._aux_features(aux)
         run = _Running(
             result=res, container=container, worker=w,
             demand_vcpus=demand, net_gbps=net, arrival=arrival, meta=meta,
-            base_exec=base_exec,
+            base_exec=base_exec, features=feats, input_mb=in_mb,
         )
         self._running[arrival.invocation_id] = run
         self._worker_running[w.wid][arrival.invocation_id] = run
@@ -586,8 +630,14 @@ class Simulator:
         # the NIC draw so estimate-mode scoring can apply each
         # candidate's own §5 slowdown without double counting (no-op
         # read path for every other routing policy, so default-mode
-        # metrics are untouched)
-        self.router.observe_exec(res.function, run.base_exec, run.net_gbps)
+        # metrics are untouched). OOM kills ran only a fraction of
+        # base_exec, so feeding the full figure would inflate the
+        # estimator — skip them.
+        if not res.oom_killed:
+            self.router.observe_exec(res.function, run.base_exec,
+                                     run.net_gbps,
+                                     features=run.features,
+                                     input_mb=run.input_mb)
         if self.dynamic:
             self._retime_worker(w)  # departures speed co-runners up
 
@@ -624,7 +674,7 @@ class Simulator:
                 for arrival, first_seen, alloc, aux in payloads:
                     self._on_arrival(arrival, first_seen, alloc, aux)
             elif kind == "warm_start":
-                arrival, meta, alloc, c, lat, first_seen = payload
+                arrival, meta, alloc, c, lat, first_seen, aux = payload
                 if c.reserved and t - first_seen > self.cfg.queue_timeout_s:
                     # reservation outlived the queue timeout (only
                     # possible when cold latency > remaining budget)
@@ -635,7 +685,8 @@ class Simulator:
                     # reservation / acquires load)
                     c.busy = False
                     self._start(arrival, meta, alloc, c, cold=True,
-                                first_seen=first_seen, cold_latency=lat)
+                                first_seen=first_seen, cold_latency=lat,
+                                aux=aux)
             elif kind == "finish":
                 arrival, meta, gen = payload
                 self._on_finish(arrival, meta, gen)
@@ -656,23 +707,29 @@ def summarize(results: List[InvocationResult]) -> Dict[str, float]:
     if not results:
         return {}
     viol = [r for r in results if r.slo_violated]
-    wasted_v = np.array([r.wasted_vcpus for r in results])
-    wasted_m = np.array([r.wasted_mem_mb for r in results])
+    # waste/utilization are resource-consumption metrics: shed and
+    # timed-out invocations never ran (used_*=0 with a real alloc_*
+    # from _record_terminal), so including them reports phantom waste
+    # for work that never consumed a cycle. They still count in the
+    # SLO/shed/timeout rates below.
+    ran = [r for r in results if not (r.shed or r.timed_out)]
+    wasted_v = np.array([r.wasted_vcpus for r in ran])
+    wasted_m = np.array([r.wasted_mem_mb for r in ran])
     util_v = np.array([
-        r.used_vcpus / r.alloc_vcpus for r in results if r.alloc_vcpus
+        r.used_vcpus / r.alloc_vcpus for r in ran if r.alloc_vcpus
     ])
     util_m = np.array([
-        r.used_mem_mb / r.alloc_mem_mb for r in results if r.alloc_mem_mb
+        r.used_mem_mb / r.alloc_mem_mb for r in ran if r.alloc_mem_mb
     ])
     colds = [r for r in results if r.cold_start]
     return {
         "n": len(results),
         "slo_violation_pct": 100.0 * len(viol) / len(results),
-        "wasted_vcpus_p50": float(np.percentile(wasted_v, 50)),
-        "wasted_vcpus_p95": float(np.percentile(wasted_v, 95)),
-        "wasted_mem_mb_p50": float(np.percentile(wasted_m, 50)),
-        "wasted_mem_mb_p75": float(np.percentile(wasted_m, 75)),
-        "wasted_mem_mb_p95": float(np.percentile(wasted_m, 95)),
+        "wasted_vcpus_p50": float(np.percentile(wasted_v, 50)) if wasted_v.size else 0.0,
+        "wasted_vcpus_p95": float(np.percentile(wasted_v, 95)) if wasted_v.size else 0.0,
+        "wasted_mem_mb_p50": float(np.percentile(wasted_m, 50)) if wasted_m.size else 0.0,
+        "wasted_mem_mb_p75": float(np.percentile(wasted_m, 75)) if wasted_m.size else 0.0,
+        "wasted_mem_mb_p95": float(np.percentile(wasted_m, 95)) if wasted_m.size else 0.0,
         "cpu_util_p50": float(np.percentile(util_v, 50)) if util_v.size else 0.0,
         "mem_util_p50": float(np.percentile(util_m, 50)) if util_m.size else 0.0,
         "cold_start_pct": 100.0 * len(colds) / len(results),

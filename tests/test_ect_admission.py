@@ -1,0 +1,328 @@
+"""Per-input ECT estimation + SLO-native admission tests (PR 6).
+
+Pins the three metrics/estimator bugfixes that ride this PR —
+summarize() counting never-ran invocations as waste, warm larger-
+container binds priced at the request's size, and OOM-killed runs
+inflating the calibration feed — plus the new behavior: the
+per-function online regressor over the invocation's cached feature
+vector (repro.core.ect) and ``admission="slo"`` shedding exactly the
+invocations whose best fleet-wide completion-time estimate exceeds
+their remaining SLO budget.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.ect import ECT_SHED_OBS, ECT_WARMUP_OBS, ECTRegressor
+from repro.core.router import DEFAULT_EXEC_ESTIMATE_S, Router
+from repro.core.scheduler import ShabariScheduler
+from repro.serving import baselines as B
+from repro.serving.experiment import run_scenario
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import (
+    InvocationResult,
+    SimConfig,
+    Simulator,
+    summarize,
+)
+from repro.serving.workload import Arrival, ScenarioSpec
+
+ALLOC = Allocation(4, 512)
+
+
+def _mk(n_clusters=2, **kwargs):
+    clusters = [
+        Cluster(n_workers=2, vcpus_per_worker=16, mem_mb_per_worker=8192,
+                vcpu_limit=16)
+        for _ in range(n_clusters)
+    ]
+    scheds = [ShabariScheduler(c) for c in clusters]
+    return clusters, Router(clusters, scheds, **kwargs)
+
+
+# ------------------------------------------------- summarize() truthfulness
+def _ran(wasted_v, wasted_m):
+    """An invocation that ran, allocated 8 vCPUs / 1024 MB, wasting the
+    given amounts."""
+    return InvocationResult(
+        invocation_id=0, function="f", arrival_t=0.0, start_t=0.0,
+        finish_t=1.0, slo_s=10.0, alloc_vcpus=8, alloc_mem_mb=1024,
+        used_vcpus=8 - wasted_v, used_mem_mb=1024 - wasted_m,
+    )
+
+
+def _never_ran(**kw):
+    """A shed/timed-out record: real alloc_*, used_*=0 (what
+    _record_terminal emits)."""
+    return InvocationResult(
+        invocation_id=1, function="f", arrival_t=0.0, start_t=0.0,
+        finish_t=0.0, slo_s=10.0, alloc_vcpus=8, alloc_mem_mb=1024, **kw
+    )
+
+
+def test_summarize_excludes_never_ran_from_waste_and_util():
+    """Shed/timed-out records must not contribute phantom waste or
+    depressed utilization — hand computation over the ran subset."""
+    results = [
+        _ran(0.0, 0.0),     # fully used
+        _ran(2.0, 256.0),   # wasted 2 vCPUs / 256 MB
+        _never_ran(shed=True),
+        _never_ran(timed_out=True),
+    ]
+    s = summarize(results)
+    # percentiles over the TWO ran records only
+    assert s["wasted_vcpus_p50"] == pytest.approx(1.0)  # median of [0, 2]
+    assert s["wasted_mem_mb_p50"] == pytest.approx(128.0)
+    assert s["cpu_util_p50"] == pytest.approx((1.0 + 0.75) / 2)
+    assert s["mem_util_p50"] == pytest.approx((1.0 + 0.75) / 2)
+    # shed/timeout still count in the rate metrics
+    assert s["n"] == 4
+    assert s["shed_pct"] == pytest.approx(25.0)
+    assert s["timeout_pct"] == pytest.approx(25.0)
+    assert s["slo_violation_pct"] == pytest.approx(50.0)
+
+
+def test_summarize_all_shed_reports_zero_waste():
+    """A run where nothing executed has no waste/utilization to report
+    (and must not crash on empty percentile arrays)."""
+    s = summarize([_never_ran(shed=True), _never_ran(shed=True)])
+    assert s["shed_pct"] == 100.0
+    assert s["wasted_vcpus_p50"] == 0.0
+    assert s["wasted_mem_mb_p95"] == 0.0
+    assert s["cpu_util_p50"] == 0.0 and s["mem_util_p50"] == 0.0
+
+
+# --------------------------------------------- warm-bind contention pricing
+def test_warm_larger_bind_priced_at_container_size():
+    """_estimate's warm case must forecast contention with the warm
+    candidate's ACTUAL size (the invocation runs at c.vcpus, which a
+    case-(2) bind can make larger than the request), not the request's."""
+    clusters, r = _mk(n_clusters=1, physical_cores=8)
+    w = clusters[0].workers[0]
+    c = clusters[0].new_container(w, "f", 8, 1024, now=0.0, warm_at=0.0)
+    w.add_active(8.0, 0.0)  # co-runner demand so the sizes diverge
+    est, kind, payload = r._estimate(0, "f", ALLOC, now=1.0)
+    assert kind == "warm" and payload is c
+    # slowdown at the container's 8 vCPUs: (8 + 8) / 8 = 2.0; pricing at
+    # the request's 4 would give 1.5
+    want = r.sched_overhead_s + 2.0 * DEFAULT_EXEC_ESTIMATE_S
+    assert est == pytest.approx(want)
+    assert r._slowdown(w, "f", c.vcpus) == pytest.approx(2.0)
+    assert r._slowdown(w, "f", ALLOC.vcpus) == pytest.approx(1.5)
+
+
+# ------------------------------------------------- OOM calibration skipping
+@pytest.fixture(scope="module")
+def stack():
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo_table = B.build_slo_table(profiles, pool)
+    return profiles, pool, slo_table
+
+
+def _static_sim(stack, mem_mb, **cfg_overrides):
+    profiles, pool, slo_table = stack
+    cfg = SimConfig(n_workers=2, vcpus_per_worker=16, physical_cores=16,
+                    mem_mb_per_worker=8 * 1024, vcpu_limit=10_000, seed=0,
+                    **cfg_overrides)
+    policy = B.StaticPolicy(12, mem_mb, "static-test")
+    return Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                     slo_table=slo_table, cfg=cfg), sorted(profiles)[0]
+
+
+def test_oom_completions_leave_estimator_untouched(stack):
+    """An OOM-killed run executed only a fraction of base_exec; feeding
+    the full figure would inflate the exec EWMA — OOM completions must
+    not calibrate."""
+    sim, fn = _static_sim(stack, mem_mb=1)  # 1 MB: everything OOMs
+    results = sim.run([Arrival(0, 0.0, fn, 0)])
+    assert len(results) == 1 and results[0].oom_killed
+    assert sim.router._exec_ewma == {}
+
+
+def test_healthy_completions_still_calibrate(stack):
+    sim, fn = _static_sim(stack, mem_mb=6 * 1024)
+    results = sim.run([Arrival(0, 0.0, fn, 0)])
+    assert len(results) == 1 and not results[0].oom_killed
+    assert fn in sim.router._exec_ewma
+    assert sim.router._exec_ewma[fn] > 0.0
+
+
+# --------------------------------------------------- SLO-native admission
+def test_slo_admission_sheds_doomed_invocation_shed_mode_admits():
+    """An invocation whose best fleet-wide estimate already exceeds its
+    SLO budget: admission="slo" sheds it at the front door while the
+    load-headroom test (empty fleet!) happily admits it."""
+    _, r_slo = _mk(admission="slo")
+    _, r_shed = _mk(admission="shed", admission_headroom=0.5)
+    for r in (r_slo, r_shed):
+        for _ in range(ECT_SHED_OBS):  # maturely calibrated: ~100 s/run
+            r.observe_exec("f", 100.0)
+    rd = r_slo.route("f", ALLOC, 0.0, slo_s=1.0)
+    assert rd.shed
+    assert r_slo.admission_slo_shed == 1 and r_slo.admission_shed == 1
+    # the headroom test sees an idle fleet and admits the doomed work
+    rd = r_shed.route("f", ALLOC, 0.0, slo_s=1.0)
+    assert not rd.shed and not rd.decision.queued
+
+
+def test_slo_admission_admits_servable_invocation_shed_mode_drops():
+    """The converse: a loaded-but-capable fleet. Load-headroom admission
+    sheds servable work; the SLO test sees the fast estimate and admits."""
+    clusters_slo, r_slo = _mk(admission="slo")
+    clusters_shed, r_shed = _mk(admission="shed", admission_headroom=0.5)
+    for clusters, r in ((clusters_slo, r_slo), (clusters_shed, r_shed)):
+        r.observe_exec("f", 0.05)  # calibrated fast function
+        for cl in clusters:  # every cluster at exactly the 0.5 headroom
+            cl.workers[0].reserve(16, 1024)
+    rd = r_shed.route("f", ALLOC, 0.0, slo_s=10.0)
+    assert rd.shed  # load says overloaded, sheds servable work
+    rd = r_slo.route("f", ALLOC, 0.0, slo_s=10.0)
+    assert not rd.shed and not rd.decision.queued  # capacity remains
+    assert r_slo.admission_slo_shed == 0
+
+
+def test_slo_admission_nonpositive_budget_sheds_unconditionally():
+    """A retry whose queueing already burned the whole SLO budget is
+    dead work regardless of calibration state."""
+    _, r = _mk(admission="slo")
+    rd = r.route("uncalibrated-fn", ALLOC, 5.0, slo_s=0.0)
+    assert rd.shed and r.admission_slo_shed == 1
+
+
+def test_slo_admission_never_sheds_on_bare_prior():
+    """No calibration yet -> always admit (the default prior must not
+    shed anything)."""
+    _, r = _mk(admission="slo")
+    rd = r.route("never-seen-fn", ALLOC, 0.0, slo_s=1e-6)
+    assert not rd.shed and r.admission_slo_shed == 0
+
+
+def test_slo_admission_requires_mature_calibration():
+    """Below ECT_SHED_OBS completions even a doomed-looking estimate
+    admits: a few heavy first draws hold the early EWMA far above its
+    steady state, and a shed is irreversible."""
+    _, r = _mk(admission="slo")
+    for _ in range(ECT_SHED_OBS - 1):
+        r.observe_exec("f", 100.0)
+    assert not r.route("f", ALLOC, 0.0, slo_s=1.0).shed  # one obs short
+    r.observe_exec("f", 100.0)
+    assert r.route("f", ALLOC, 0.0, slo_s=1.0).shed  # bar met -> sheds
+
+
+def test_slo_admission_saturated_fleet_falls_through_to_queue():
+    """An infinite estimate means nothing can be placed RIGHT NOW — not
+    that the SLO is unmeetable. Fall through to normal queue/retry."""
+    clusters, r = _mk(admission="slo")
+    r.observe_exec("f", 0.05)
+    for cl in clusters:
+        for w in cl.workers:
+            w.acquire(w.vcpu_limit, 0)
+    rd = r.route("f", ALLOC, 0.0, slo_s=10.0)
+    assert not rd.shed and rd.decision.queued
+
+
+# ------------------------------------------------- per-input ECT regression
+def test_regressor_learns_input_dependence():
+    """After warmup the regressor must rank a large input's exec above a
+    small input's — the per-input signal the EWMA cannot carry."""
+    reg = ECTRegressor()
+    feats = np.zeros(3)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        mb = float(rng.uniform(1.0, 100.0))
+        # time linear in size; residual learned off the prior
+        reg.observe("f", feats, mb, exec_s=0.1 * mb, prior_s=5.0)
+    small = reg.predict("f", feats, 2.0, prior_s=5.0)
+    large = reg.predict("f", feats, 80.0, prior_s=5.0)
+    assert small is not None and large is not None
+    assert large > small
+    assert small < 5.0 < large  # straddles the input-blind prior
+
+
+def test_regressor_warmup_abstains_and_clamps():
+    reg = ECTRegressor()
+    feats = np.zeros(2)
+    for i in range(ECT_WARMUP_OBS - 1):
+        reg.observe("f", feats, 1.0, exec_s=1.0, prior_s=1.0)
+    assert reg.predict("f", feats, 1.0, prior_s=1.0) is None  # warming up
+    reg.observe("f", feats, 1.0, exec_s=1.0, prior_s=1.0)
+    est = reg.predict("f", feats, 1.0, prior_s=1.0)
+    assert est is not None
+    # clamp: predictions stay within ECT_CLAMP x of the prior
+    lo = reg.predict("f", feats, 1.0, prior_s=1e-6)
+    from repro.core.ect import ECT_CLAMP
+    assert lo <= 1e-6 * ECT_CLAMP + 1e-18
+
+
+def test_estimate_features_off_restores_ewma_estimator():
+    """Router(estimate_features=False): the A/B fallback must return the
+    EWMA exactly, features or not."""
+    _, r = _mk(admission="none", estimate_features=False)
+    feats = np.zeros(3)
+    for mb, t in ((1.0, 0.1), (100.0, 10.0)) * 10:
+        r.observe_exec("f", t, features=feats, input_mb=mb)
+    ewma = r._exec_ewma["f"]
+    assert r._exec_estimate("f", feats, 1.0) == ewma
+    assert r._exec_estimate("f", feats, 100.0) == ewma
+    assert r._ect.observations("f") == 0  # the regressor never trained
+
+
+def test_router_per_input_estimates_diverge_with_features():
+    _, r = _mk(admission="none")
+    feats = np.zeros(3)
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        mb = float(rng.uniform(1.0, 100.0))
+        r.observe_exec("f", 0.1 * mb, features=feats, input_mb=mb)
+    small = r._exec_estimate("f", feats, 2.0)
+    large = r._exec_estimate("f", feats, 80.0)
+    assert large > small  # per-input, unlike the flat EWMA
+    assert r._exec_estimate("f") == r._exec_ewma["f"]  # no features -> EWMA
+
+
+def test_simulator_gates_aux_features_on_config(stack):
+    profiles, pool, slo_table = stack
+    aux = (np.zeros(3, np.float32), 42.0)
+    for flag, want in ((True, (aux[0], 42.0)), (False, (None, None))):
+        cfg = SimConfig(seed=0, estimate_features=flag)
+        sim = Simulator(policy=B.StaticPolicy(4, 512, "s"),
+                        profiles=profiles, input_pool=pool,
+                        slo_table=slo_table, cfg=cfg)
+        got = sim._aux_features(aux)
+        assert (got[0] is want[0]) and got[1] == want[1]
+        assert sim.router.estimate_features is flag
+    # non-feature aux (other policies' caches) pass through as absent
+    assert sim._aux_features(None) == (None, None)
+    assert sim._aux_features({"opaque": 1}) == (None, None)
+
+
+# ------------------------------------------------------------------- e2e
+def _overload_cfg(**overrides):
+    return SimConfig(n_workers=8, n_clusters=2, routing="spill-over",
+                     vcpus_per_worker=44, physical_cores=32,
+                     mem_mb_per_worker=16 * 1024, vcpu_limit=44,
+                     retry_interval_s=1.0, queue_timeout_s=60.0, seed=0,
+                     **overrides)
+
+
+def test_slo_admission_end_to_end_sheds_only_doomed_work():
+    """A saturating flash crowd: admission="slo" sheds work — every
+    record it sheds is a genuine SLO casualty — and beats load-headroom
+    shedding on BOTH axes (fewer violations from fewer sheds)."""
+    spec = ScenarioSpec(scenario="flash-crowd", rps=2.0, duration_s=180.0,
+                        seed=1, params={"spike_mult": 8.0})
+    slo = run_scenario("shabari", spec, sim_cfg=_overload_cfg(admission="slo"),
+                       keep_results=True)
+    shed = run_scenario(
+        "shabari", spec,
+        sim_cfg=_overload_cfg(admission="shed", admission_headroom=0.9),
+        keep_results=True,
+    )
+    assert slo.summary["shed_pct"] > 0
+    assert all(r.slo_violated for r in slo.results if r.shed)
+    assert (slo.summary["slo_violation_pct"]
+            < shed.summary["slo_violation_pct"])
+    assert slo.summary["shed_pct"] < shed.summary["shed_pct"]

@@ -276,7 +276,7 @@ def test_estimate_home_tie_break_and_est_s():
     rd = r.route("f", ALLOC, 0.0)
     assert rd.cluster_idx == r.home_cluster("f") and not rd.spilled
     expected = r._cold_estimate(ALLOC) + r.sched_overhead_s \
-        + r._slowdown(clusters[0].workers[0], "f", ALLOC) \
+        + r._slowdown(clusters[0].workers[0], "f", ALLOC.vcpus) \
         * DEFAULT_EXEC_ESTIMATE_S
     assert rd.est_s == pytest.approx(expected)
 
