@@ -1,0 +1,211 @@
+"""Topology-aware vs transfer-blind estimate routing A/B over a WAN
+fleet (repro.core.fleet).
+
+Two clusters of identical machines sit across a constrained WAN link
+(1 Gb/s, 50 ms). The simulator always charges input-payload transfer on
+remote placements; the arms differ only in what the ROUTER believes:
+
+* ``aware``       — estimate routing, ``estimate_transfer=True``: the
+  candidate score prices each remote candidate with the invocation's
+  own payload over the actual link (plus the per-machine cold curve and
+  exec-speed factor);
+* ``blind``       — the same estimate routing with
+  ``estimate_transfer=False``: remote spills look free, exactly the
+  pre-fleet cost model;
+* ``spill-over``  — load-ranked spilling, the transfer-oblivious
+  reference heuristic.
+
+On heavy-tail inputs (compress payloads reach 2 GB -> 16 s over the
+link) the blind forecaster happily ships the biggest payloads to the
+far cluster whenever home looks busy; the aware forecaster keeps them
+home and spills the cheap-to-move work instead. The uniform-fleet
+control runs the same arms on the same machines with free links, where
+``estimate_transfer`` must be inert (the pricing path is skipped
+entirely on a free topology).
+
+CI gates:
+
+* ``aware`` must BEAT ``blind`` on SLO-violation % in at least one
+  heavy-tail WAN cell — a refactor that drops transfer from the
+  candidate score (or stops threading per-input sizes into ``route``)
+  fails here;
+* ``aware`` and ``blind`` must be SLO-identical (within 0.5 pts) on the
+  uniform-fleet free-link control — transfer pricing must never
+  activate, let alone tax, a topology with nothing to price.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import QUICK, emit
+from repro.core.fleet import ClusterSpec, FleetSpec, Link, MachineType, Topology
+from repro.serving import baselines as B
+from repro.serving.experiment import make_policy
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import SimConfig, Simulator, summarize
+from repro.serving.workload import ScenarioSpec, generate_scenario
+
+TOTAL_WORKERS = 8 if QUICK else 16
+N_CLUSTERS = 2
+DURATION_S = 240.0 if QUICK else 360.0
+RPS = 1.0 if QUICK else 2.0
+POLICY = "shabari"
+
+# estimate_bench's per-worker shape (vcpu_limit > physical cores, so
+# placements translate into §5 contention) on an explicit FleetSpec
+_MACHINE = MachineType(
+    name="bench-32c", physical_cores=32, vcpus=44, mem_mb=16 * 1024,
+    vcpu_limit=44)
+
+
+def _fleet(topology: Topology) -> FleetSpec:
+    per_cluster = ClusterSpec(
+        machines=((_MACHINE, TOTAL_WORKERS // N_CLUSTERS),))
+    return FleetSpec(clusters=(per_cluster,) * N_CLUSTERS,
+                     topology=topology)
+
+
+WAN_FLEET = _fleet(Topology(default_link=Link(gbps=1.0, latency_s=0.05)))
+UNIFORM_FLEET = _fleet(Topology())
+
+# label -> SimConfig overrides; all three arms run the SAME fleet per
+# cell, so deltas isolate the router's cost model
+ARMS = (
+    ("aware", dict(routing="estimate")),
+    ("blind", dict(routing="estimate", estimate_transfer=False)),
+    ("spill-over", dict(routing="spill-over")),
+)
+
+# cell -> (params, rps scale, fleet): the WAN cells pair heavy-tail
+# input sizes with enough spill pressure that routing decides who pays
+# the link (at 2x base load the hot cluster saturates while the fleet
+# still has capacity — transfer becomes painful but avoidable; at
+# lighter load spills are too rare to separate the arms, and under
+# fleet-wide overload the link is the least of anyone's problems). The
+# -xl variant steepens the input skew so more of the spilled bytes are
+# tail payloads. The control is the same machines at half load with
+# free links.
+SCENARIOS = {
+    "wan-spill": ({}, 2.0, WAN_FLEET),
+    "wan-spill-xl": ({"skew": 5.0}, 2.0, WAN_FLEET),
+    "uniform-control": ({}, 0.5, UNIFORM_FLEET),
+}
+# bench-cell key -> registered scenario name (where they differ: the
+# -xl variant and the control only rename a registered generator)
+_SCENARIO_NAME = {"wan-spill-xl": "wan-spill",
+                  "uniform-control": "poisson-steady"}
+# the cells the aware-beats-blind gate quantifies over
+WAN_CELLS = ("wan-spill", "wan-spill-xl")
+# a third trace seed: router_bench uses 0 and estimate_bench 1 on
+# overlapping fleets/loads, so an independent seed keeps this sweep
+# from replaying their exact simulations
+TRACE_SEED = 2
+
+
+def _cfg(fleet: FleetSpec, **overrides) -> SimConfig:
+    return SimConfig(
+        fleet=fleet,
+        retry_interval_s=1.0,
+        queue_timeout_s=60.0,
+        seed=0,
+        **overrides,
+    )
+
+
+def _run_cell(trace, profiles, pool, slo_table, fleet, overrides):
+    policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=_cfg(fleet, **overrides))
+    t0 = time.perf_counter()
+    summary = summarize(sim.run(trace))
+    wall = time.perf_counter() - t0
+    eps = sim.events_processed / wall
+    return summary, sim.router, eps
+
+
+def run() -> None:
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo_table = B.build_slo_table(profiles, pool)
+
+    cells = {}
+    warmed = False
+    for cell, (params, rps_scale, fleet) in SCENARIOS.items():
+        scenario = _SCENARIO_NAME.get(cell, cell)
+        spec = ScenarioSpec(scenario=scenario, rps=RPS * rps_scale,
+                            duration_s=DURATION_S, seed=TRACE_SEED,
+                            params=dict(params))
+        trace = generate_scenario(
+            spec, functions=sorted(profiles),
+            inputs_per_function={f: len(pool[f]) for f in profiles},
+        )
+        if not warmed:
+            # throwaway run: trace shabari's jit kernels so the one-time
+            # compiles aren't charged to the first timed cell
+            _run_cell(trace[: max(len(trace) // 4, 1)], profiles, pool,
+                      slo_table, fleet, dict(routing="spill-over"))
+            warmed = True
+        for label, overrides in ARMS:
+            summary, router, eps = _run_cell(
+                trace, profiles, pool, slo_table, fleet, overrides)
+            cells[(cell, label)] = summary
+            emit(
+                f"fleet_bench.{cell}.{label}",
+                1e6 / max(eps, 1e-9),
+                f"n={len(trace)}"
+                f"|events_per_sec={eps:.0f}"
+                f"|slo_viol_pct={summary['slo_violation_pct']:.2f}"
+                f"|cold_start_pct={summary['cold_start_pct']:.2f}"
+                f"|timeout_pct={summary['timeout_pct']:.2f}"
+                f"|wasted_vcpus_p95={summary['wasted_vcpus_p95']:.2f}"
+                f"|spills_warm={router.spills_warm}"
+                f"|spills_cold={router.spills_cold}"
+                f"|binds_warming={router.binds_warming}",
+            )
+
+    # headline deltas: what pricing the payload's transfer buys
+    for cell in SCENARIOS:
+        blind = cells[(cell, "blind")]
+        aware = cells[(cell, "aware")]
+        emit(
+            f"fleet_bench.{cell}.aware_gain",
+            0.0,
+            f"slo_viol_reduction_pts="
+            f"{blind['slo_violation_pct'] - aware['slo_violation_pct']:.2f}"
+            f"|blind={blind['slo_violation_pct']:.2f}"
+            f"|aware={aware['slo_violation_pct']:.2f}",
+        )
+
+    # CI gate 1: transfer-aware routing must beat transfer-blind on at
+    # least one heavy-tail WAN cell
+    wins = [
+        c for c in WAN_CELLS
+        if (cells[(c, "aware")]["slo_violation_pct"]
+            < cells[(c, "blind")]["slo_violation_pct"] - 1e-9)
+    ]
+    if not wins:
+        raise RuntimeError(
+            "transfer-aware estimate routing failed to beat transfer-blind "
+            "on any WAN cell: " + ", ".join(
+                f"{c}: aware {cells[(c, 'aware')]['slo_violation_pct']:.2f}%"
+                f" vs blind {cells[(c, 'blind')]['slo_violation_pct']:.2f}%"
+                for c in WAN_CELLS))
+
+    # CI gate 2: on free links the estimate_transfer flag must be inert
+    ctrl_aware = cells[("uniform-control", "aware")]
+    ctrl_blind = cells[("uniform-control", "blind")]
+    drift = abs(ctrl_aware["slo_violation_pct"]
+                - ctrl_blind["slo_violation_pct"])
+    if drift > 0.5:
+        raise RuntimeError(
+            "estimate_transfer changed behavior on the free-link uniform "
+            f"control: aware {ctrl_aware['slo_violation_pct']:.2f}% vs "
+            f"blind {ctrl_blind['slo_violation_pct']:.2f}%")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -43,6 +43,7 @@ MODULES = [
     ("router_bench", "benchmarks.router_bench"),
     ("admission_bench", "benchmarks.admission_bench"),
     ("estimate_bench", "benchmarks.estimate_bench"),
+    ("fleet_bench", "benchmarks.fleet_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]

@@ -39,7 +39,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.fleet import MachineType
 
 _container_ids = itertools.count()
 
@@ -70,6 +72,12 @@ class Worker:
     total_mem_mb: int = 125 * 1024
     # oversubscription limit (userCPU hyperparameter, §6/§7.5)
     vcpu_limit: int = 90
+    # the hardware behind this worker — the single source of the §5
+    # model constants (physical cores, NIC Gbps, cold-start curve,
+    # exec-speed factor) read by BOTH the simulator's charging and the
+    # router's forecasting, so the two cannot drift apart
+    machine: MachineType = dataclasses.field(
+        default_factory=MachineType, repr=False)
     used_vcpus: int = 0
     used_mem_mb: int = 0
     # the committed-but-warming slice of used_vcpus/used_mem_mb:
@@ -202,6 +210,7 @@ class Cluster:
         mem_mb_per_worker: int = 125 * 1024,
         vcpu_limit: Optional[int] = None,
         legacy_scans: bool = False,
+        machines: Optional[Sequence[MachineType]] = None,
     ):
         # legacy_scans restores the pre-refactor O(containers) warm
         # lookup (see Simulator's SimConfig.legacy_scans) for A/B
@@ -215,15 +224,26 @@ class Cluster:
         self.used_mem_mb = 0
         self.reserved_vcpus = 0
         self.reserved_mem_mb = 0
+        if machines is None:
+            # homogeneous legacy path: one machine type mirroring the
+            # worker-shape args (vcpu_limit only overrides the worker
+            # cap, not the machine's advertised vcpus)
+            uniform = MachineType(
+                vcpus=vcpus_per_worker,
+                mem_mb=mem_mb_per_worker,
+                vcpu_limit=vcpu_limit,
+            )
+            machines = [uniform] * n_workers
         self.workers = [
             Worker(
                 wid=i,
-                total_vcpus=vcpus_per_worker,
-                total_mem_mb=mem_mb_per_worker,
-                vcpu_limit=vcpu_limit or vcpus_per_worker,
+                total_vcpus=m.vcpus,
+                total_mem_mb=m.mem_mb,
+                vcpu_limit=m.limit,
+                machine=m,
                 cluster=self,
             )
-            for i in range(n_workers)
+            for i, m in enumerate(machines)
         ]
 
     def new_container(

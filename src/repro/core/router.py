@@ -90,6 +90,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster, Worker
+from repro.core.fleet import Topology
 from repro.core.ect import (
     ECT_BLIND_SHED_BAND,
     ECT_ERR_WIDEN,
@@ -132,11 +133,10 @@ class Router:
         admission: str = "none",
         admission_headroom: float = 0.95,
         estimate_horizon_s: float = 1.5,
-        cold_base_s: float = 0.45,
-        cold_per_gb_s: float = 0.12,
         sched_overhead_s: float = 0.001,
-        physical_cores: int = 96,
-        nic_gbps: float = 10.0,
+        topology: Optional[Topology] = None,
+        price_transfer: bool = True,
+        pool_key: Optional[Callable[[str], str]] = None,
         network_fed: Optional[Callable[[str], bool]] = None,
         estimate_features: bool = True,
     ):
@@ -155,19 +155,33 @@ class Router:
         self.routing = routing
         self.admission = admission
         self.admission_headroom = admission_headroom
-        # estimate-mode model parameters (mirroring the simulator's
-        # SimConfig so the router's forecasts use the same cold-start
-        # curve, scheduling overhead, and §5 contention constants the
-        # runtime will actually charge)
+        # Estimate-mode hardware model: cold-start curve, §5 contention
+        # denominators, and exec-speed factor all come from each
+        # candidate Worker's OWN MachineType (repro.core.fleet) — the
+        # exact hardware the runtime will charge, one source of truth
+        # instead of parallel constructor constants that can drift.
+        # The topology prices the input-payload transfer a remote
+        # placement pays; price_transfer=False scores spills as free
+        # (the pre-fleet assumption, kept for A/B — fleet_bench).
         assert estimate_horizon_s >= 0.0
         self.estimate_horizon_s = estimate_horizon_s
-        self.cold_base_s = cold_base_s
-        self.cold_per_gb_s = cold_per_gb_s
         self.sched_overhead_s = sched_overhead_s
-        self.physical_cores = max(physical_cores, 1)
-        self.nic_gbps = nic_gbps
+        self.topology = topology
+        self.price_transfer = price_transfer
+        # transfer pricing short-circuits on free topologies (the
+        # default), so uniform fleets never hash home clusters per score
+        self._price_transfer_active = (
+            price_transfer and topology is not None
+            and not topology.is_free()
+        )
         self.network_fed = network_fed
-        # per-function EWMAs of observed UNCONTENDED exec seconds and
+        # calibration pool key: estimator state (EWMAs, observation
+        # counts, the per-input regressor) is keyed by pool_key(fn) —
+        # the simulator passes base_function, so clone aliases (fn::k)
+        # share exec evidence instead of each relearning from scratch.
+        # Identity when None.
+        self._pool: Callable[[str], str] = pool_key or (lambda fn: fn)
+        # per-pool EWMAs of observed UNCONTENDED exec seconds and
         # object-store NIC draw — the calibration state behind
         # _exec_estimate/_slowdown (fed by observe_exec). The exec EWMA
         # doubles as the cold prior (and clamp anchor) for the
@@ -251,17 +265,25 @@ class Router:
         observation additionally trains the per-input regressor
         (:mod:`repro.core.ect`) unless ``estimate_features`` is off.
         The feed is deterministic given the event order, so
-        estimate-mode runs stay reproducible under a fixed seed."""
+        estimate-mode runs stay reproducible under a fixed seed.
+
+        The reported time is REFERENCE-machine normalized (the runtime
+        divides out its worker's exec-speed factor along with the
+        contention slowdown), so one estimator serves every machine
+        type — candidate scoring re-applies each candidate's own
+        factor. State is keyed by the calibration pool
+        (``pool_key``), so clone aliases share one model."""
         if base_exec_s <= 0.0:
             return
-        prev = self._exec_ewma.get(function)
-        self._exec_ewma[function] = (
+        key = self._pool(function)
+        prev = self._exec_ewma.get(key)
+        self._exec_ewma[key] = (
             base_exec_s if prev is None
             else (1.0 - EXEC_EWMA_ALPHA) * prev + EXEC_EWMA_ALPHA * base_exec_s
         )
-        self._exec_obs[function] = self._exec_obs.get(function, 0) + 1
-        prev_net = self._net_ewma.get(function)
-        self._net_ewma[function] = (
+        self._exec_obs[key] = self._exec_obs.get(key, 0) + 1
+        prev_net = self._net_ewma.get(key)
+        self._net_ewma[key] = (
             net_gbps if prev_net is None
             else (1.0 - EXEC_EWMA_ALPHA) * prev_net
             + EXEC_EWMA_ALPHA * net_gbps
@@ -269,7 +291,7 @@ class Router:
         if self.estimate_features and features is not None:
             # train on the residual off the pre-update EWMA (first
             # observation: off itself, a zero residual)
-            self._ect.observe(function, features,
+            self._ect.observe(key, features,
                               input_mb if input_mb is not None else 0.0,
                               base_exec_s,
                               prev if prev is not None else base_exec_s)
@@ -279,20 +301,31 @@ class Router:
         """Per-function exec forecast: the per-input regressor when it
         is trained and the caller supplied this invocation's features,
         else the EWMA (also the regressor's cold prior and clamp
-        anchor); ``DEFAULT_EXEC_ESTIMATE_S`` before any observation."""
-        prior = self._exec_ewma.get(function, DEFAULT_EXEC_ESTIMATE_S)
+        anchor); ``DEFAULT_EXEC_ESTIMATE_S`` before any observation.
+        Reference-machine seconds — callers scale by the candidate
+        worker's ``exec_factor``."""
+        key = self._pool(function)
+        prior = self._exec_ewma.get(key, DEFAULT_EXEC_ESTIMATE_S)
         if self.estimate_features and features is not None:
             est = self._ect.predict(
-                function, features,
+                key, features,
                 input_mb if input_mb is not None else 0.0, prior)
             if est is not None:
                 return est
         return prior
 
-    def _cold_estimate(self, alloc: Allocation) -> float:
-        """Mean-field cold-start latency for the predicted container
-        size (the simulator's curve without its lognormal jitter)."""
-        return self.cold_base_s + self.cold_per_gb_s * alloc.mem_mb / 1024.0
+    def _transfer_s(self, function: str, ci: int,
+                    input_mb: Optional[float]) -> float:
+        """Input-payload transfer price for serving ``function`` on
+        cluster ``ci``: the payload lives in the home cluster's object
+        store, so remote placements pay the link (exactly what the
+        runtime charges). 0.0 on free topologies or with
+        ``price_transfer=False`` (the transfer-BLIND A/B arm)."""
+        if not self._price_transfer_active:
+            return 0.0
+        return self.topology.transfer_s(
+            self.home_cluster(function), ci,
+            input_mb if input_mb is not None else 0.0)
 
     def _slowdown(self, w: Worker, function: str, vcpus: float) -> float:
         """Forecast §5 contention on ``w`` if this invocation lands
@@ -305,15 +338,17 @@ class Router:
         the runtime charges the arriving invocation's draw too, so the
         forecast must or it would systematically understate busy-NIC
         placements) for network-fed functions. O(1) — reads the
-        worker's incremental aggregates."""
+        worker's incremental aggregates and its own MachineType's §5
+        denominators (cores, NIC) — the same values the runtime
+        divides by."""
         cpu = max(
             1.0,
-            (w.active_demand_vcpus + float(vcpus)) / self.physical_cores,
+            (w.active_demand_vcpus + float(vcpus)) / w.machine.physical_cores,
         )
         net = 1.0
         if self.network_fed is not None and self.network_fed(function):
-            own = self._net_ewma.get(function, 0.0)
-            net = max(1.0, (w.active_net_gbps + own) / self.nic_gbps)
+            own = self._net_ewma.get(self._pool(function), 0.0)
+            net = max(1.0, (w.active_net_gbps + own) / w.machine.nic_gbps)
         return max(cpu, net)
 
     def _estimate(self, ci: int, function: str, alloc: Allocation,
@@ -331,17 +366,26 @@ class Router:
         to a cluster that cannot place."""
         cl = self.clusters[ci]
         exec_est = self._exec_estimate(function, features, input_mb)
+        # transfer price for landing on this cluster (0.0 for home,
+        # free topologies, or the transfer-blind A/B arm). Mirrors the
+        # runtime's charging: warm placements pay it serially, cold and
+        # warming placements overlap it with the warm-up wait.
+        xfer = self._transfer_s(function, ci, input_mb)
         # (a) warm container usable now — the EXACT container scheduler
         # cases (1)/(2) would bind, so the contention forecast prices
         # the worker that will actually serve the invocation. The
         # slowdown is priced with the CONTAINER's size, not the
         # request's: the runtime runs the invocation at c.vcpus, which
-        # a case-(2) bind can make larger than alloc.vcpus
+        # a case-(2) bind can make larger than alloc.vcpus. exec_est is
+        # reference-machine seconds; the bind worker's exec-speed
+        # factor scales it to local silicon.
         c = self.schedulers[ci].warm_candidate(function, alloc.vcpus,
                                                alloc.mem_mb, now)
         if c is not None:
             slow = self._slowdown(c.worker, function, c.vcpus)
-            return (self.sched_overhead_s + slow * exec_est, "warm", c)
+            est = (xfer + self.sched_overhead_s
+                   + slow * (exec_est * c.worker.machine.exec_factor))
+            return (est, "warm", c)
         # (b)/(c) no warm container: compare binding to a warming-soon
         # container (pay the residual warm-up) against this cluster's
         # own cold start, and forecast the cheaper. Unlike the warm
@@ -356,16 +400,21 @@ class Router:
             # like the warm case, a warming bind runs at the container's
             # size (warming_soon only returns >= alloc candidates)
             slow = self._slowdown(c.worker, function, c.vcpus)
-            warming_est = ((c.warm_at - now) + self.sched_overhead_s
-                           + slow * exec_est)
+            warming_est = (max(c.warm_at - now, xfer)
+                           + self.sched_overhead_s
+                           + slow * (exec_est
+                                     * c.worker.machine.exec_factor))
         w = self.schedulers[ci].cold_candidate(function, alloc.vcpus,
                                                alloc.mem_mb)
         cold_est = None
         if w is not None:
-            # cold starts create an exact-size container
+            # cold starts create an exact-size container, at the target
+            # machine's own cold-start curve (mean-field — the
+            # simulator's curve without its lognormal jitter)
             slow = self._slowdown(w, function, alloc.vcpus)
-            cold_est = (self._cold_estimate(alloc) + self.sched_overhead_s
-                        + slow * exec_est)
+            cold_est = (max(w.machine.cold_latency_s(alloc.mem_mb), xfer)
+                        + self.sched_overhead_s
+                        + slow * (exec_est * w.machine.exec_factor))
         if warming_est is not None and (cold_est is None
                                         or warming_est <= cold_est):
             # ties prefer the warming bind: its warm-up is already paid
@@ -502,22 +551,35 @@ class Router:
           confident-looking mispredictions."""
         if slo_s <= 0.0:
             return True
-        prior = self._exec_ewma.get(function)
+        key = self._pool(function)
+        prior = self._exec_ewma.get(key)
         if prior is None:
             return False
         per_input = (self.estimate_features and features is not None
-                     and self._ect.observations(function) >= ECT_WARMUP_OBS)
+                     and self._ect.observations(key) >= ECT_WARMUP_OBS)
         exec_est = self._exec_estimate(function, features, input_mb)
-        best = min(
-            self._slowdown(w, function, alloc.vcpus)
-            for cl in self.clusters for w in cl.workers
+        # irreducible ECT PER CLUSTER, then the fleet-wide best: each
+        # cluster's cheapest worker (its own §5 slowdown and exec-speed
+        # factor) plus that cluster's transfer price. A fleet-min
+        # slowdown over all workers would let a far/slow cluster's idle
+        # machine mask that no cluster can actually serve in budget.
+        # On a uniform free-link fleet this reduces exactly to the old
+        # fleet-min expression.
+        est = min(
+            self._transfer_s(function, ci, input_mb)
+            + self.sched_overhead_s
+            + min(
+                self._slowdown(w, function, alloc.vcpus)
+                * (exec_est * w.machine.exec_factor)
+                for w in cl.workers
+            )
+            for ci, cl in enumerate(self.clusters)
         )
-        est = self.sched_overhead_s + best * exec_est
-        if (self._exec_obs.get(function, 0) >= ECT_SHED_OBS
+        if (self._exec_obs.get(key, 0) >= ECT_SHED_OBS
                 and est > slo_s * ECT_BLIND_SHED_BAND):
             return True
         margin = ECT_SLO_MARGIN * math.exp(
-            ECT_ERR_WIDEN * self._ect.log_error(function))
+            ECT_ERR_WIDEN * self._ect.log_error(key))
         return (per_input and exec_est > prior
                 and est > slo_s * margin)
 

@@ -86,10 +86,21 @@ class ShabariScheduler:
             order = sorted(
                 self.cluster.workers, key=lambda w: -(w.used_vcpus + 1e-9)
             )
+        # type-aware placement: the first fitting RELIABLE worker in
+        # walk order wins; preemptible (spot-tier) workers serve only
+        # as a fallback when no reliable worker fits — a cold start
+        # seeds the function's warm pool for its whole keep-alive, and
+        # pools on reclaimable machines are the ones that vanish.
+        # Identical to the plain walk on all-reliable fleets.
+        fallback: Optional[Worker] = None
         for w in order:
-            if w.fits(vcpus, mem_mb):
+            if not w.fits(vcpus, mem_mb):
+                continue
+            if not w.machine.preemptible:
                 return w
-        return None
+            if fallback is None:
+                fallback = w
+        return fallback
 
     def cold_candidate(self, function: str, vcpus: int,
                        mem_mb: int) -> Optional[Worker]:

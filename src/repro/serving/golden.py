@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from repro.core.fleet import ClusterSpec, FleetSpec, Link, MachineType, Topology
 from repro.serving.experiment import run_scenario
 from repro.serving.simulator import SimConfig
 from repro.serving.workload import ScenarioSpec, list_scenarios
@@ -52,11 +53,44 @@ LEGACY_ENGINE_SCENARIOS = ("heavy-tail-inputs",)
 ESTIMATE_ROUTING_SCENARIOS = ("multi-cluster",)
 
 
+# Heterogeneous-fleet goldens (repro.core.fleet). Both fleets keep the
+# main goldens' 4-worker footprint (2 clusters x 2 workers of 32-vCPU/
+# 16-GB machines) so metrics stay comparable across scenarios:
+#
+# * hetero-fleet — cluster 0 is the reference fast tier, cluster 1 a
+#   cheap/slow spot tier (half the cores, slower NIC and cold starts,
+#   1.35x exec time, preemptible), free links: pins the per-machine
+#   cold-curve / contention / exec-factor / preemptible-last paths;
+# * wan-spill — uniform fast machines, but the clusters sit across a
+#   1 Gb / 50 ms WAN link, under estimate routing: pins transfer
+#   charging and the router's transfer pricing on spills.
+_GOLDEN_FAST = MachineType(
+    name="fast-32c", physical_cores=32, vcpus=32, mem_mb=16 * 1024)
+_GOLDEN_SLOW = MachineType(
+    name="slow-16c", physical_cores=16, vcpus=32, mem_mb=16 * 1024,
+    nic_gbps=5.0, cold_base_s=0.65, cold_per_gb_s=0.18, exec_factor=1.35,
+    preemptible=True, price_per_hour=0.4)
+_GOLDEN_HETERO_FLEET = FleetSpec(clusters=(
+    ClusterSpec(machines=((_GOLDEN_FAST, 2),)),
+    ClusterSpec(machines=((_GOLDEN_SLOW, 2),)),
+))
+_GOLDEN_WAN_FLEET = FleetSpec(
+    clusters=(
+        ClusterSpec(machines=((_GOLDEN_FAST, 2),)),
+        ClusterSpec(machines=((_GOLDEN_FAST, 2),)),
+    ),
+    topology=Topology(default_link=Link(gbps=1.0, latency_s=0.05)),
+)
+
 # per-scenario SimConfig overrides: multi-cluster splits the same
 # 4-worker footprint into 2 clusters x 2 workers behind the spill-over
-# router, so the golden actually exercises the front door
+# router, so the golden actually exercises the front door; the two
+# fleet scenarios swap in an explicit FleetSpec (which overrides the
+# uniform n_clusters/n_workers knobs entirely)
 _GOLDEN_SIM_OVERRIDES: Dict[str, Dict] = {
     "multi-cluster": {"n_clusters": 2, "n_workers": 2},
+    "hetero-fleet": {"fleet": _GOLDEN_HETERO_FLEET},
+    "wan-spill": {"fleet": _GOLDEN_WAN_FLEET, "routing": "estimate"},
 }
 
 

@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.cluster import Cluster, Container, Worker
 from repro.core.cost_functions import Observation
 from repro.core.daemon import UtilizationTrace, WorkerDaemon, synth_trace
+from repro.core.fleet import FleetSpec, MachineType
 from repro.core.metadata_store import MetadataStore
 from repro.serving.profiles import FunctionProfile, base_function, input_size_mb
 from repro.serving.workload import Arrival
@@ -163,6 +164,28 @@ class SimConfig:
     # cache no features (the static/offline baselines) always use the
     # EWMA path regardless.
     estimate_features: bool = True
+    # Heterogeneous fleet + network topology (repro.core.fleet). None
+    # (default) builds the uniform fleet the flags above describe —
+    # n_clusters x n_workers of one machine type mirroring
+    # physical_cores / vcpus_per_worker / vcpu_limit /
+    # mem_mb_per_worker / cold_base_s / cold_per_gb_s / NIC_GBPS, with
+    # zero-cost links — and is bit-identical to pre-fleet behavior. An
+    # explicit FleetSpec OVERRIDES those per-worker/per-cluster flags
+    # entirely (each Worker takes its MachineType's shape; note this
+    # includes the OpenWhisk-baseline vcpu_limit override in
+    # repro.serving.experiment, which is a no-op under an explicit
+    # fleet) and charges arrival→cluster input-payload transfer time on
+    # remote placements over non-free links.
+    fleet: Optional[FleetSpec] = None
+    # Estimate-mode A/B for the fleet refactor: when True (default) the
+    # router PRICES the same input-payload transfer time the simulator
+    # charges on remote placements (plus each machine's cold curve and
+    # exec-speed factor — those are always priced via Worker.machine).
+    # False makes estimate routing transfer-BLIND: it scores remote
+    # clusters as if spilling were free, the pre-fleet assumption
+    # (benchmarks/fleet_bench gates the gap). No effect on what the
+    # simulator charges.
+    estimate_transfer: bool = True
 
 
 @dataclasses.dataclass
@@ -281,15 +304,34 @@ class Simulator:
         self.input_pool = input_pool
         self.slo_table = slo_table
         self.rng = np.random.default_rng(self.cfg.seed)
+        # resolve the fleet: an explicit FleetSpec wins; otherwise build
+        # the uniform fleet the scalar flags describe, so every layer
+        # below reads hardware from Worker.machine either way
+        if self.cfg.fleet is not None:
+            self.fleet = self.cfg.fleet
+        else:
+            self.fleet = FleetSpec.uniform(
+                self.cfg.n_clusters, self.cfg.n_workers,
+                MachineType(
+                    physical_cores=self.cfg.physical_cores,
+                    vcpus=self.cfg.vcpus_per_worker,
+                    mem_mb=self.cfg.mem_mb_per_worker,
+                    nic_gbps=NIC_GBPS,
+                    cold_base_s=self.cfg.cold_base_s,
+                    cold_per_gb_s=self.cfg.cold_per_gb_s,
+                    vcpu_limit=self.cfg.vcpu_limit,
+                ),
+            )
+        # transfer charging is skipped entirely on free topologies (the
+        # default): no per-arrival home-cluster hash, no extra events —
+        # the event stream is bit-identical to pre-fleet behavior
+        self._charge_transfer = not self.fleet.topology.is_free()
         self.clusters = [
             Cluster(
-                n_workers=self.cfg.n_workers,
-                vcpus_per_worker=self.cfg.vcpus_per_worker,
-                mem_mb_per_worker=self.cfg.mem_mb_per_worker,
-                vcpu_limit=self.cfg.vcpu_limit,
                 legacy_scans=self.cfg.legacy_scans,
+                machines=spec.worker_machines(),
             )
-            for _ in range(self.cfg.n_clusters)
+            for spec in self.fleet.clusters
         ]
         # worker ids become globally unique across clusters: the
         # simulator keys per-worker state (_worker_running) by wid.
@@ -319,15 +361,17 @@ class Simulator:
             admission=self.cfg.admission,
             admission_headroom=self.cfg.admission_headroom,
             estimate_features=self.cfg.estimate_features,
-            # estimate-mode model parameters: the router forecasts with
-            # the same cold-start curve, scheduling overhead, and §5
-            # contention constants this simulator charges
             estimate_horizon_s=self.cfg.estimate_horizon_s,
-            cold_base_s=self.cfg.cold_base_s,
-            cold_per_gb_s=self.cfg.cold_per_gb_s,
             sched_overhead_s=self.cfg.sched_overhead_s,
-            physical_cores=self.cfg.physical_cores,
-            nic_gbps=NIC_GBPS,
+            # the router forecasts from the SAME per-worker MachineType
+            # (cold curve, cores, NIC, exec factor) and Topology this
+            # simulator charges — the §5 constants have one source now
+            topology=self.fleet.topology,
+            price_transfer=self.cfg.estimate_transfer,
+            # clone aliases (fn::k) share estimator state: calibration
+            # is keyed by base function, so cold-storm's clones learn
+            # one model instead of each relearning from scratch
+            pool_key=base_function,
             network_fed=lambda fn: base_function(fn) in NETWORK_FED,
         )
         # single-cluster aliases (the common case, and what most tests
@@ -356,9 +400,13 @@ class Simulator:
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
 
     # ------------------------------------------------------------ helpers
-    def cold_latency(self, vcpus: int, mem_mb: int) -> float:
+    def cold_latency(self, vcpus: int, mem_mb: int,
+                     machine: Optional[MachineType] = None) -> float:
+        """Container-create latency on ``machine`` (the target worker's
+        hardware; default-fleet machines mirror the SimConfig curve)."""
+        m = machine if machine is not None else self.fleet.clusters[0].machines[0][0]
         jitter = float(self.rng.lognormal(0.0, 0.15))
-        return (self.cfg.cold_base_s + self.cfg.cold_per_gb_s * mem_mb / 1024.0) * jitter
+        return m.cold_latency_s(mem_mb) * jitter
 
     def _contention(self, w: Worker, fn: str, extra_demand: float,
                     extra_net: float) -> float:
@@ -373,16 +421,17 @@ class Simulator:
         else:
             demand = extra_demand + w.active_demand_vcpus
             net = extra_net + w.active_net_gbps
-        cpu_slow = max(1.0, demand / self.cfg.physical_cores)
-        net_slow = (max(1.0, net / NIC_GBPS)
+        cpu_slow = max(1.0, demand / w.machine.physical_cores)
+        net_slow = (max(1.0, net / w.machine.nic_gbps)
                     if base_function(fn) in NETWORK_FED else 1.0)
         return max(cpu_slow, net_slow)
 
-    def _net_demand(self, fn: str, meta: Dict, exec_s: float) -> float:
+    def _net_demand(self, fn: str, meta: Dict, exec_s: float,
+                    nic_gbps: float = NIC_GBPS) -> float:
         if base_function(fn) not in NETWORK_FED or exec_s <= 0:
             return 0.0
         bits = input_size_mb(fn, meta) * 8e6
-        return min(bits / 1e9 / max(exec_s, 0.1), NIC_GBPS)
+        return min(bits / 1e9 / max(exec_s, 0.1), nic_gbps)
 
     def _aux_features(self, aux) -> Tuple[Optional[object], Optional[float]]:
         """The (feature vector, input MB) pair a policy caches in its
@@ -457,19 +506,33 @@ class Simulator:
                        (arrival, first_seen, alloc, aux))
             return
 
+        # input-payload transfer (repro/core/fleet.py): the payload
+        # lives in the function's HOME cluster's object store, so a
+        # remote placement first moves it over the inter-cluster link.
+        # The wait lands in queued_s. Free topologies (every default
+        # fleet) skip this entirely — no per-arrival home hash, no
+        # extra events — so pre-fleet event streams are bit-identical.
+        xfer = 0.0
+        if self._charge_transfer:
+            xfer = self.fleet.topology.transfer_s(
+                self.router.home_cluster(arrival.function),
+                route.cluster_idx,
+                input_size_mb(arrival.function, meta))
+
         if decision.pending is not None:
             # estimate routing bound this invocation to a still-warming
             # uncommitted container (a §5 case-2 background launch):
             # commit it — mark busy so no other arrival can take it,
             # reserve its capacity (acquire-on-placement, same as a
             # fresh cold start), and start when it turns warm. The
-            # invocation pays only the residual warm-up.
+            # invocation pays only the residual warm-up (and, remotely,
+            # whatever of the payload transfer the warm-up doesn't hide).
             c = decision.pending
             c.busy = True
             if not self.cfg.legacy_acquire:
                 c.worker.reserve(c.vcpus, c.mem_mb)
                 c.reserved = True
-            self._push(c.warm_at, "warm_start",
+            self._push(max(c.warm_at, now + xfer), "warm_start",
                        (arrival, meta, alloc, c, c.warm_at - now, first_seen,
                         aux))
             return
@@ -480,17 +543,28 @@ class Simulator:
             w, v, m = decision.background_launch
             c = cluster.new_container(
                 w, arrival.function, v, m, now,
-                warm_at=now + self.cold_latency(v, m),
+                warm_at=now + self.cold_latency(v, m, w.machine),
             )
             self._note_size(arrival.function, v, m)
 
         if decision.container is not None:
-            self._start(arrival, meta, alloc, decision.container,
-                        cold=False, first_seen=first_seen, aux=aux)
+            c = decision.container
+            if xfer > 0.0:
+                # warm container on a remote cluster: hold it while the
+                # payload crosses the link, then start
+                c.busy = True
+                c.last_used = now
+                self._push(now + xfer, "xfer_start",
+                           (arrival, meta, alloc, c, first_seen, aux))
+            else:
+                self._start(arrival, meta, alloc, c,
+                            cold=False, first_seen=first_seen, aux=aux)
         else:
-            # cold start: create the container, start when warm
+            # cold start: create the container, start when warm (the
+            # payload transfer overlaps the warm-up; only the excess
+            # beyond the cold latency delays the start)
             w, v, m = decision.background_launch
-            lat = self.cold_latency(v, m)
+            lat = self.cold_latency(v, m, w.machine)
             c = cluster.new_container(w, arrival.function, v, m, now,
                                       warm_at=now + lat)
             c.busy = True
@@ -501,7 +575,7 @@ class Simulator:
                 w.reserve(v, m)
                 c.reserved = True
             self._note_size(arrival.function, v, m)
-            self._push(now + lat, "warm_start",
+            self._push(now + max(lat, xfer), "warm_start",
                        (arrival, meta, alloc, c, lat, first_seen, aux))
 
     def _note_size(self, fn: str, v: int, m: int) -> None:
@@ -536,13 +610,18 @@ class Simulator:
         else:
             w.acquire(container.vcpus, container.mem_mb)
 
-        # the invocation runs with the CONTAINER's size (may exceed request)
+        # the invocation runs with the CONTAINER's size (may exceed
+        # request). base_exec is REFERENCE-machine uncontended seconds
+        # (what profiles model and what calibrates the router's
+        # estimator); the worker's exec-speed factor scales it to this
+        # machine's uncontended time before contention applies.
         vcpus = container.vcpus
         base_exec = prof.exec_time(meta, vcpus, self.rng, contention=1.0)
+        eff_exec = base_exec * w.machine.exec_factor
         demand = prof.vcpus_used(meta, vcpus)
-        net = self._net_demand(fn, meta, base_exec)
+        net = self._net_demand(fn, meta, eff_exec, w.machine.nic_gbps)
         slow = self._contention(w, fn, demand, net)
-        exec_s = base_exec * slow
+        exec_s = eff_exec * slow
 
         mem_used = prof.mem_used_mb(meta)
         oom = mem_used > container.mem_mb
@@ -570,9 +649,9 @@ class Simulator:
         self._worker_running[w.wid][arrival.invocation_id] = run
         w.add_active(demand, net)
         if self.dynamic:
-            # track uncontended work; the finish event floats as
-            # co-runners come and go
-            run.base_remaining = base_exec * (0.6 if oom else 1.0)
+            # track uncontended work (on THIS machine); the finish event
+            # floats as co-runners come and go
+            run.base_remaining = eff_exec * (0.6 if oom else 1.0)
             run.slow = slow
             run.last_t = now
             self._push(now + run.base_remaining * slow, "finish",
@@ -687,6 +766,14 @@ class Simulator:
                     self._start(arrival, meta, alloc, c, cold=True,
                                 first_seen=first_seen, cold_latency=lat,
                                 aux=aux)
+            elif kind == "xfer_start":
+                # remote warm placement: the input payload finished
+                # crossing the inter-cluster link; run on the warm
+                # container that was held for it (_start re-marks busy)
+                arrival, meta, alloc, c, first_seen, aux = payload
+                c.busy = False
+                self._start(arrival, meta, alloc, c, cold=False,
+                            first_seen=first_seen, aux=aux)
             elif kind == "finish":
                 arrival, meta, gen = payload
                 self._on_finish(arrival, meta, gen)

@@ -14,9 +14,12 @@ Because allocation quality flips under bursty versus steady load
 2105.14845), evaluation also needs the other load shapes a production
 FaaS sees. ``SCENARIOS`` names them: ``azure`` (the trace shape above),
 ``poisson-steady``, ``flash-crowd``, ``diurnal``, ``heavy-tail-inputs``,
-``cold-storm``, ``oversubscribe`` (the §7.5 study), and
+``cold-storm``, ``oversubscribe`` (the §7.5 study),
 ``multi-cluster`` (a hot-function surge for the front-door router,
-``repro.core.router``). Each generator
+``repro.core.router``), ``hetero-fleet`` (steady skewed load for
+machine-type mixes, ``repro.core.fleet``), and ``wan-spill`` (the
+hot-surge shape with heavy-tail inputs, where remote placements pay
+real transfer time over modeled links). Each generator
 is a pure seeded function of a :class:`ScenarioSpec`, so a (spec, seed)
 pair always yields the identical ``Arrival`` list.
 """
@@ -345,3 +348,63 @@ def _multi_cluster(spec: ScenarioSpec, functions, inputs_per_function, rng):
     times = _thinned_times(rate, spec.rps * max(mult, 1.0), spec.duration_s,
                            rng)
     return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
+@register_scenario("hetero-fleet")
+def _hetero_fleet(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Steady Zipf load with moderately size-skewed inputs — the probe
+    shape for heterogeneous fleets (repro.core.fleet): no burst
+    dynamics, so metric deltas isolate what per-machine cold curves,
+    exec-speed factors, and §5 denominators change about placement.
+    Run it under a FleetSpec mixing machine types (the golden pins a
+    fast-tier + slow-tier mix). params: skew (input-weight exponent,
+    default 2.0)."""
+    skew = spec.param("skew", 2.0)
+    pop = function_popularity(functions, rng)
+    times = _poisson_times(spec.rps, spec.duration_s, rng)
+
+    def input_weights(n: int) -> np.ndarray:
+        w = (np.arange(1, n + 1, dtype=np.float64)) ** skew
+        return w / w.sum()
+
+    return _assemble(times, functions, pop, inputs_per_function, rng,
+                     input_weights=input_weights)
+
+
+@register_scenario("wan-spill")
+def _wan_spill(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Hot-function surge (multi-cluster's shape) with HEAVY-TAIL input
+    sizes: the hot functions' home cluster saturates, forcing spills,
+    while large inputs make every remote placement pay real transfer
+    time over the inter-cluster links (repro.core.fleet.Topology) —
+    the regime where transfer-aware estimate routing separates from
+    transfer-blind (benchmarks/fleet_bench). params: hot_fns (default
+    2), hot_frac (default 0.7), skew (input-weight exponent, default
+    3.0), spike_mult (default 4), spike_start_frac (default 0.4),
+    spike_duration_s (default 60)."""
+    n_hot = max(1, min(int(spec.param("hot_fns", 2)), len(functions)))
+    hot_frac = min(max(spec.param("hot_frac", 0.7), 0.0), 1.0)
+    hot = rng.choice(len(functions), size=n_hot, replace=False)
+    pop = np.full(
+        len(functions),
+        (1.0 - hot_frac) / max(len(functions) - n_hot, 1),
+    )
+    pop[hot] = hot_frac / n_hot
+    pop = pop / pop.sum()
+
+    mult = spec.param("spike_mult", 4.0)
+    t0 = spec.param("spike_start_frac", 0.4) * spec.duration_s
+    t1 = min(t0 + spec.param("spike_duration_s", 60.0), spec.duration_s)
+    skew = spec.param("skew", 3.0)
+
+    def rate(t: np.ndarray) -> np.ndarray:
+        return np.where((t >= t0) & (t < t1), spec.rps * mult, spec.rps)
+
+    def input_weights(n: int) -> np.ndarray:
+        w = (np.arange(1, n + 1, dtype=np.float64)) ** skew
+        return w / w.sum()
+
+    times = _thinned_times(rate, spec.rps * max(mult, 1.0), spec.duration_s,
+                           rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng,
+                     input_weights=input_weights)

@@ -16,6 +16,7 @@ import pytest
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster
 from repro.core.ect import ECT_SHED_OBS, ECT_WARMUP_OBS, ECTRegressor
+from repro.core.fleet import MachineType
 from repro.core.router import DEFAULT_EXEC_ESTIMATE_S, Router
 from repro.core.scheduler import ShabariScheduler
 from repro.serving import baselines as B
@@ -32,10 +33,15 @@ from repro.serving.workload import Arrival, ScenarioSpec
 ALLOC = Allocation(4, 512)
 
 
-def _mk(n_clusters=2, **kwargs):
+def _mk(n_clusters=2, physical_cores=None, **kwargs):
+    # hardware rides on each worker's MachineType (repro.core.fleet)
+    machines = None
+    if physical_cores is not None:
+        machines = [MachineType(physical_cores=physical_cores, vcpus=16,
+                                mem_mb=8192)] * 2
     clusters = [
         Cluster(n_workers=2, vcpus_per_worker=16, mem_mb_per_worker=8192,
-                vcpu_limit=16)
+                vcpu_limit=16, machines=machines)
         for _ in range(n_clusters)
     ]
     scheds = [ShabariScheduler(c) for c in clusters]

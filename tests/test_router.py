@@ -11,6 +11,7 @@ import pytest
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster
+from repro.core.fleet import MachineType
 from repro.core.router import DEFAULT_EXEC_ESTIMATE_S, Router
 from repro.core.scheduler import ShabariScheduler
 from repro.serving.experiment import run_scenario
@@ -20,15 +21,28 @@ from repro.serving.workload import ScenarioSpec
 ALLOC = Allocation(4, 512)
 
 
-def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0, **kwargs):
+def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0,
+        physical_cores=None, **kwargs):
+    # hardware now rides on each worker's MachineType (repro.core.fleet)
+    # rather than Router constructor constants
+    machines = None
+    if physical_cores is not None:
+        machines = [MachineType(physical_cores=physical_cores, vcpus=16,
+                                mem_mb=8192)] * n_workers
     clusters = [
         Cluster(n_workers=n_workers, vcpus_per_worker=16,
-                mem_mb_per_worker=8192, vcpu_limit=16)
+                mem_mb_per_worker=8192, vcpu_limit=16, machines=machines)
         for _ in range(n_clusters)
     ]
     scheds = [ShabariScheduler(c) for c in clusters]
     return clusters, Router(clusters, scheds, routing=routing, seed=seed,
                             **kwargs)
+
+
+def _cold_estimate(clusters, alloc):
+    """Mean-field cold-start latency on these (uniform) test fleets —
+    the per-machine curve the router now prices."""
+    return clusters[0].workers[0].machine.cold_latency_s(alloc.mem_mb)
 
 
 def _saturate(cluster):
@@ -161,7 +175,7 @@ def test_warming_soon_inside_horizon_is_estimate_target():
     assert rd.decision.pending is c
     assert rd.decision.container is None and not rd.decision.cold_start
     # the estimate charges the residual warm-up, not a full cold start
-    assert rd.est_s is not None and rd.est_s < r._cold_estimate(ALLOC) \
+    assert rd.est_s is not None and rd.est_s < _cold_estimate(clusters, ALLOC) \
         + DEFAULT_EXEC_ESTIMATE_S
     assert r.routed_home == 1
 
@@ -275,7 +289,7 @@ def test_estimate_home_tie_break_and_est_s():
     clusters, r = _mk(n_clusters=3, routing="estimate")
     rd = r.route("f", ALLOC, 0.0)
     assert rd.cluster_idx == r.home_cluster("f") and not rd.spilled
-    expected = r._cold_estimate(ALLOC) + r.sched_overhead_s \
+    expected = _cold_estimate(clusters, ALLOC) + r.sched_overhead_s \
         + r._slowdown(clusters[0].workers[0], "f", ALLOC.vcpus) \
         * DEFAULT_EXEC_ESTIMATE_S
     assert rd.est_s == pytest.approx(expected)
