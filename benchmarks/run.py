@@ -9,10 +9,14 @@ The CI bench-regression gate (see benchmarks/README.md):
 
   --json-out PATH       dump every emitted row as JSON (the workflow
                         artifact, so the BENCH_*.json trajectory
-                        accumulates across runs)
+                        accumulates across runs); also writes a
+                        deterministic BENCH_latest.json next to it
   --check-baseline      compare events/sec + SLO-violation rates against
                         benchmarks/baselines.json; exit non-zero on a
-                        >25% events/sec regression or a missing row
+                        >25% events/sec regression or a missing row.
+                        A failing row within 2x of its floor re-runs
+                        its module (best-of-3, per-row max) before the
+                        verdict — flake resistance for loaded runners
   --write-baseline      regenerate benchmarks/baselines.json from this
                         run (intentional re-baselining; commit the diff)
 """
@@ -65,33 +69,48 @@ def collect_baseline_metrics(rows):
     compare across runs. The SLO/admission sweeps also print
     events_per_sec, but their sub-second cells swing with machine load,
     so they contribute only their (deterministic) SLO-violation rates.
+
+    A best-of-3 re-measure appends duplicate-named rows, so events/sec
+    takes the per-name MAX (the machine's least-loaded attempt); the
+    deterministic SLO rates just take the latest.
     """
     events, slo = {}, {}
     for row in rows:
         derived = util.parse_derived(str(row["derived"]))
-        if "events_per_sec" in derived and str(row["name"]).startswith(
-                "sim_bench."):
-            events[row["name"]] = derived["events_per_sec"]
+        name = str(row["name"])
+        if "events_per_sec" in derived and name.startswith("sim_bench."):
+            eps = derived["events_per_sec"]
+            if name not in events or eps > events[name]:
+                events[name] = eps
         if "slo_viol_pct" in derived:
-            slo[row["name"]] = derived["slo_viol_pct"]
+            slo[name] = derived["slo_viol_pct"]
     return {"events_per_sec": events, "slo_violation_pct": slo}
 
 
-def check_baseline(rows) -> list:
-    """Compare this run against benchmarks/baselines.json; returns a
-    list of failure strings (empty = gate passed)."""
+def check_baseline(rows, attempts: int = 1):
+    """Compare this run against benchmarks/baselines.json.
+
+    Returns ``(failures, retry_modules)``: a list of failure strings
+    (empty = gate passed) and the module keys whose failing rows came
+    in WITHIN 2x of their floor — a plausible machine-load flake worth
+    a best-of-3 re-measure rather than an immediate verdict. Rows more
+    than 2x under their floor are treated as real regressions and are
+    not retried."""
     if not os.path.exists(BASELINE_PATH):
-        return [f"missing {BASELINE_PATH}; run with --write-baseline first"]
+        return ([f"missing {BASELINE_PATH}; run with --write-baseline first"],
+                set())
     with open(BASELINE_PATH) as f:
         baseline = json.load(f)
     if baseline.get("bench_quick") != util.QUICK:
-        return [
+        return ([
             f"baseline was captured with bench_quick={baseline.get('bench_quick')}"
             f" but this run has bench_quick={util.QUICK}; quick and full "
             "sweeps use different traces/fleets and are not comparable"
-        ]
+        ], set())
     current = collect_baseline_metrics(rows)
     failures = []
+    retry_modules = set()
+    best_of = f"best of {attempts} runs" if attempts > 1 else "single run"
     for name, base_eps in sorted(baseline.get("events_per_sec", {}).items()):
         cur_eps = current["events_per_sec"].get(name)
         if cur_eps is None:
@@ -101,12 +120,16 @@ def check_baseline(rows) -> list:
         floor = base_eps * (1.0 - EVENTS_PER_SEC_TOLERANCE)
         status = "FAIL" if cur_eps < floor else "ok"
         print(f"# baseline {status}: {name} events/sec "
-              f"{cur_eps:.0f} vs {base_eps:.0f} (floor {floor:.0f})",
+              f"{cur_eps:.0f} vs {base_eps:.0f} (floor {floor:.0f}, "
+              f"{best_of})",
               file=sys.stderr)
         if cur_eps < floor:
             failures.append(
                 f"{name}: events/sec regressed >25% "
-                f"({cur_eps:.0f} < floor {floor:.0f}, baseline {base_eps:.0f})")
+                f"({cur_eps:.0f} < floor {floor:.0f}, baseline {base_eps:.0f}, "
+                f"{best_of})")
+            if cur_eps >= floor / 2.0:
+                retry_modules.add(name.split(".", 1)[0])
     for name, base_slo in sorted(baseline.get("slo_violation_pct", {}).items()):
         cur_slo = current["slo_violation_pct"].get(name)
         if cur_slo is None:
@@ -118,7 +141,7 @@ def check_baseline(rows) -> list:
                   f"{base_slo:.2f} -> {cur_slo:.2f} "
                   "(informational; refresh with --write-baseline if intended)",
                   file=sys.stderr)
-    return failures
+    return failures, retry_modules
 
 
 def main() -> None:
@@ -137,25 +160,59 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = []
+    modules = {}
     for key, modname in MODULES:
         if only and key not in only:
             continue
         t0 = time.time()
         try:
-            mod = __import__(modname, fromlist=["run"])
+            mod = modules[key] = __import__(modname, fromlist=["run"])
             mod.run()
             print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception as e:
             failures.append((key, repr(e)))
             traceback.print_exc()
 
+    # flake resistance: a gated row that lands under its floor but
+    # within 2x of it gets its whole module re-run (up to best-of-3,
+    # per-row max) before the verdict — multi-second cells still swing
+    # with machine load on shared CI runners
+    gate = []
+    if args.check_baseline:
+        attempts = 1
+        gate, retry = check_baseline(util.ROWS, attempts)
+        while retry and attempts < 3:
+            attempts += 1
+            print(f"# re-measuring {sorted(retry)} (attempt {attempts}/3): "
+                  "failing rows were within 2x of their floor",
+                  file=sys.stderr)
+            for key in sorted(retry):
+                mod = modules.get(key)
+                if mod is None:
+                    break
+                try:
+                    mod.run()
+                except Exception as e:
+                    failures.append((key, repr(e)))
+                    traceback.print_exc()
+            gate, retry = check_baseline(util.ROWS, attempts)
+
     if args.json_out:
+        payload = {"bench_quick": util.QUICK, "rows": util.ROWS}
         with open(args.json_out, "w") as f:
-            json.dump({"bench_quick": util.QUICK, "rows": util.ROWS},
-                      f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {len(util.ROWS)} rows to {args.json_out}",
               file=sys.stderr)
+        # the deterministic twin: a fixed name the workflow can upload
+        # (and humans can diff) without knowing the run id baked into
+        # --json-out
+        latest = os.path.join(
+            os.path.dirname(args.json_out) or ".", "BENCH_latest.json")
+        with open(latest, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {latest}", file=sys.stderr)
     if args.write_baseline:
         # merge into the existing baseline so a subset re-baseline
         # (--only sim_bench) can't silently delete every other gate;
@@ -180,11 +237,9 @@ def main() -> None:
         print(f"# wrote baseline to {BASELINE_PATH}", file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
-    if args.check_baseline:
-        gate = check_baseline(util.ROWS)
-        if gate:
-            raise SystemExit(
-                "bench-regression gate failed:\n  " + "\n  ".join(gate))
+    if gate:
+        raise SystemExit(
+            "bench-regression gate failed:\n  " + "\n  ".join(gate))
 
 
 if __name__ == "__main__":

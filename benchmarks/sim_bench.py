@@ -31,6 +31,14 @@ Three A/Bs, each against a pre-fix path kept behind a config switch:
   learning-path throughput gate: the arena must be ≥3x events/sec AND
   bit-identical in summary metrics (enforced here, not just printed).
 
+Plus the ``scale`` tier (run_stack_ab + run_scale): a full-stack A/B —
+array-backed event loop + indexed scans + agent arena vs
+``legacy_event_loop`` + ``legacy_scans`` + the legacy engine, hard-
+failing on any summary-metric difference — and the azure-24h cell, one
+production day at Azure-trace scale (~100k invocations under
+BENCH_QUICK=1, 1M otherwise) whose events/sec floor rides
+benchmarks/baselines.json.
+
   PYTHONPATH=src python -m benchmarks.sim_bench
 """
 
@@ -178,6 +186,99 @@ def run_retry_ab(profiles, pool, slo_table) -> None:
             f"policy: {sum_fast} != {sum_legacy}")
 
 
+# ------------------------------------------------------------- scale tier
+# The azure-24h tier: one production day at Azure-trace scale. Quick mode
+# compresses the diurnal cycle into a tenth of a day at the same rate
+# (~100k invocations); the full sweep runs the whole 24 h (1M). The
+# fleet is deliberately saturated at its peak with queue-mode admission
+# holding the backlog at the front door, so the event mix matches what a
+# production-scale replay looks like: a long retry tail around the
+# diurnal crest plus warm/cold starts everywhere else.
+SCALE_N = 100_000 if QUICK else 1_000_000
+SCALE_DURATION_S = 8_640.0 if QUICK else 86_400.0
+
+
+def _scale_config() -> SimConfig:
+    return SimConfig(seed=0, n_clusters=10, n_workers=16,
+                     admission="queue", admission_headroom=0.85,
+                     queue_timeout_s=90.0, retry_interval_s=0.5)
+
+
+def run_scale(profiles, pool, slo_table) -> None:
+    """events/sec on the azure-24h trace (floor in baselines.json)."""
+    spec = ScenarioSpec(scenario="azure-24h", rps=SCALE_N / SCALE_DURATION_S,
+                        duration_s=SCALE_DURATION_S, seed=11)
+    t0 = time.perf_counter()
+    trace = generate_scenario(
+        spec, functions=sorted(profiles),
+        inputs_per_function={f: len(pool[f]) for f in profiles},
+    )
+    build_wall = time.perf_counter() - t0
+    pol = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=_scale_config())
+    t0 = time.perf_counter()
+    results = sim.run(trace)
+    wall = time.perf_counter() - t0
+    ev = sim.events_processed
+    timeouts = sum(r.timed_out for r in results)
+    emit("sim_bench.scale_azure24h", wall / ev * 1e6,
+         f"n={len(trace)}|events={ev}|events_per_sec={ev / wall:.0f}"
+         f"|trace_build_s={build_wall:.2f}|timeouts={timeouts}")
+
+
+def _run_stack(trace, profiles, pool, slo_table, *, legacy: bool):
+    """One leg of the full-stack A/B: the fast stack (array-backed
+    event loop + indexed scans + agent arena) or the whole legacy stack
+    (global heapq loop + O(running)/O(containers) scans + per-object
+    agent engine). Same uncapped cell as the scans A/B."""
+    cfg = SimConfig(seed=0, vcpu_limit=100_000,
+                    mem_mb_per_worker=4_000_000,
+                    legacy_event_loop=legacy, legacy_scans=legacy)
+    pol = make_policy("shabari-legacy-engine" if legacy else "shabari",
+                      profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=cfg)
+    t0 = time.perf_counter()
+    results = sim.run(trace)
+    wall = time.perf_counter() - t0
+    return sim.events_processed, wall, summarize(results)
+
+
+def run_stack_ab(trace, profiles, pool, slo_table) -> None:
+    """Learning-policy full-stack A/B on the heavy-tail trace.
+
+    Every layer of the legacy stack is a metric-identical slow path
+    (the event loop, the scan refactor, and the agent engine are all
+    pure fast paths), so the summaries must match BIT-identically —
+    enforced with a hard failure, same as the engine A/B. The speedup
+    floor here is a conservative in-bench backstop; the real
+    events/sec floors ride benchmarks/baselines.json where the
+    best-of-3 re-measure absorbs machine noise."""
+    # jit kernels + arena calibration are already warm: run() calls
+    # run_engine_ab first, which traces both engines on this trace
+    ev_l, wall_l, sum_l = _run_stack(
+        trace, profiles, pool, slo_table, legacy=True)
+    ev_f, wall_f, sum_f = _run_stack(
+        trace, profiles, pool, slo_table, legacy=False)
+    eps_l = ev_l / wall_l
+    eps_f = ev_f / wall_f
+    emit("sim_bench.scale_legacy_stack", wall_l / ev_l * 1e6,
+         f"n={len(trace)}|events={ev_l}|events_per_sec={eps_l:.0f}")
+    emit("sim_bench.scale_fast_stack", wall_f / ev_f * 1e6,
+         f"n={len(trace)}|events={ev_f}|events_per_sec={eps_f:.0f}")
+    emit("sim_bench.scale_stack_speedup", 0.0,
+         f"x{eps_f / eps_l:.2f}|metrics_identical={sum_f == sum_l}")
+    if sum_f != sum_l:
+        raise RuntimeError(
+            "fast stack changed shabari summary metrics vs the full "
+            f"legacy stack: {sum_f} != {sum_l}")
+    if eps_f < 4.0 * eps_l:
+        raise RuntimeError(
+            "fast stack below the 4x events/sec backstop vs the full "
+            f"legacy stack: {eps_f:.0f} vs {eps_l:.0f}")
+
+
 def run() -> None:
     profiles = build_profiles()
     pool = build_input_pool(seed=0)
@@ -207,6 +308,8 @@ def run() -> None:
 
     run_engine_ab(trace, profiles, pool, slo_table)
     run_retry_ab(profiles, pool, slo_table)
+    run_stack_ab(trace, profiles, pool, slo_table)
+    run_scale(profiles, pool, slo_table)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from repro.serving.golden import (  # noqa: E402
     GOLDEN_POLICY,
     LEGACY_ACQUIRE_SCENARIOS,
     LEGACY_ENGINE_SCENARIOS,
+    LEGACY_EVENT_LOOP_SCENARIOS,
     golden_specs,
     run_golden,
 )
@@ -38,13 +39,15 @@ from repro.serving.golden import (  # noqa: E402
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "goldens")
 LEGACY_SUBDIR = "legacy-acquire"
 LEGACY_ENGINE_SUBDIR = "legacy-engine"
+LEGACY_EVENT_LOOP_SUBDIR = "legacy-event-loop"
 ESTIMATE_SUBDIR = "estimate-routing"
 
 
 def write_snapshot(scenario: str, out_dir: str, *,
                    legacy_acquire: bool = False,
                    legacy_engine: bool = False,
-                   estimate_routing: bool = False) -> Dict:
+                   estimate_routing: bool = False,
+                   legacy_event_loop: bool = False) -> Dict:
     """Run one golden scenario and write its snapshot JSON; returns the
     written document (the schema tests/test_refresh_goldens.py pins)."""
     os.makedirs(out_dir, exist_ok=True)
@@ -54,7 +57,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
         "spec": dataclasses.asdict(golden_specs()[scenario]),
         "summary": run_golden(scenario, legacy_acquire=legacy_acquire,
                               legacy_engine=legacy_engine,
-                              estimate_routing=estimate_routing),
+                              estimate_routing=estimate_routing,
+                              legacy_event_loop=legacy_event_loop),
     }
     path = os.path.join(out_dir, f"{scenario}.json")
     with open(path, "w") as f:
@@ -62,7 +66,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
         f.write("\n")
     tag = (" (legacy-acquire)" if legacy_acquire
            else " (legacy-engine)" if legacy_engine
-           else " (estimate-routing)" if estimate_routing else "")
+           else " (estimate-routing)" if estimate_routing
+           else " (legacy-event-loop)" if legacy_event_loop else "")
     print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
           f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
     return doc
@@ -80,6 +85,10 @@ def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
             write_snapshot(
                 scenario, os.path.join(out_dir, LEGACY_ENGINE_SUBDIR),
                 legacy_engine=True)
+        if scenario in LEGACY_EVENT_LOOP_SCENARIOS:
+            write_snapshot(
+                scenario, os.path.join(out_dir, LEGACY_EVENT_LOOP_SUBDIR),
+                legacy_event_loop=True)
         if scenario in ESTIMATE_ROUTING_SCENARIOS:
             write_snapshot(
                 scenario, os.path.join(out_dir, ESTIMATE_SUBDIR),

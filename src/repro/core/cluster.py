@@ -41,12 +41,60 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.fleet import MachineType
 
 _container_ids = itertools.count()
 
 
-@dataclasses.dataclass
+class WorkerArrays:
+    """Struct-of-arrays backing store for per-worker mutable state.
+    Each :class:`Worker` is a view into one slot of its cluster's
+    shared arrays: scalar reads/writes go through the worker facade
+    exactly as before, while bulk readers (the router's fleet-wide SLO
+    scoring, summaries, tests) can consume a whole cluster's state as
+    vectors without touching Python objects.
+
+    Storage is split by access pattern: the contention aggregates and
+    machine constants are NumPy arrays because the router's SLO
+    scoring consumes them as whole vectors, while the capacity
+    counters (used/reserved vcpus + memory) are plain Python lists —
+    every reader of those is scalar and per-worker (``fits``, the
+    scheduler's per-candidate headroom checks, the worker facade), and
+    a list index returns a cheap native int where a NumPy scalar read
+    costs ~10x.
+
+    The machine-constant arrays (cores, NIC, exec factor) duplicate
+    each worker's :class:`MachineType` values — they are filled once at
+    cluster construction from those same objects, never written again.
+    """
+
+    __slots__ = (
+        "used_vcpus", "used_mem_mb", "reserved_vcpus", "reserved_mem_mb",
+        "active_demand_vcpus", "active_net_gbps",
+        "physical_cores", "nic_gbps", "exec_factor",
+    )
+
+    def __init__(self, n: int):
+        self.used_vcpus = [0] * n
+        self.used_mem_mb = [0] * n
+        self.reserved_vcpus = [0] * n
+        self.reserved_mem_mb = [0] * n
+        self.active_demand_vcpus = np.zeros(n, dtype=np.float64)
+        self.active_net_gbps = np.zeros(n, dtype=np.float64)
+        self.physical_cores = np.ones(n, dtype=np.float64)
+        self.nic_gbps = np.ones(n, dtype=np.float64)
+        self.exec_factor = np.ones(n, dtype=np.float64)
+
+    def fill_machine_constants(self, machines: Sequence[MachineType]) -> None:
+        for i, m in enumerate(machines):
+            self.physical_cores[i] = m.physical_cores
+            self.nic_gbps[i] = m.nic_gbps
+            self.exec_factor[i] = m.exec_factor
+
+
+@dataclasses.dataclass(slots=True)
 class Container:
     cid: int
     function: str
@@ -78,22 +126,18 @@ class Worker:
     # router's forecasting, so the two cannot drift apart
     machine: MachineType = dataclasses.field(
         default_factory=MachineType, repr=False)
-    used_vcpus: int = 0
-    used_mem_mb: int = 0
-    # the committed-but-warming slice of used_vcpus/used_mem_mb:
-    # reservations are COUNTED inside the used_* totals (so ``fits`` and
-    # the cluster aggregates need no special cases); these track how
-    # much of that total is reservations, for observability and tests
-    reserved_vcpus: int = 0
-    reserved_mem_mb: int = 0
     # owning-cluster backref so acquire/release can maintain the
     # cluster-level load aggregates (None for standalone Workers)
     cluster: Optional["Cluster"] = dataclasses.field(default=None, repr=False)
-    # Incremental aggregates over RUNNING invocations (parallel demand
-    # and object-store NIC draw) so contention lookups are O(1) instead
-    # of a scan over every running invocation per event.
-    active_demand_vcpus: float = 0.0
-    active_net_gbps: float = 0.0
+    # struct-of-arrays backing store (WorkerArrays) + this worker's slot
+    # in it. Cluster-built workers share their cluster's arrays so bulk
+    # readers can vectorize over every worker at once; a standalone
+    # Worker gets a private single-slot store in __post_init__. The
+    # scalar attributes below (used_vcpus, reserved_*, active_*) are
+    # properties over these slots — same reads/writes as the old plain
+    # fields, one storage location.
+    soa: Optional[WorkerArrays] = dataclasses.field(default=None, repr=False)
+    sidx: int = 0
     containers: Dict[int, Container] = dataclasses.field(default_factory=dict)
     # per-function view of ``containers`` so warm lookups touch only the
     # function's own containers instead of scanning every container on
@@ -103,23 +147,87 @@ class Worker:
         default_factory=dict
     )
 
+    def __post_init__(self) -> None:
+        if self.soa is None:
+            self.soa = WorkerArrays(1)
+            self.sidx = 0
+            self.soa.fill_machine_constants([self.machine])
+
+    # ------------------------------------- SoA-backed scalar views
+    # used_* totals COUNT warming reservations (so ``fits`` and the
+    # cluster aggregates need no special cases); reserved_* track how
+    # much of the total is reservations, for observability and tests.
+    # active_* are the incremental aggregates over RUNNING invocations
+    # (parallel demand and object-store NIC draw) so contention lookups
+    # are O(1) instead of a scan over every running invocation.
+    @property
+    def used_vcpus(self) -> int:
+        return int(self.soa.used_vcpus[self.sidx])
+
+    @used_vcpus.setter
+    def used_vcpus(self, v: int) -> None:
+        self.soa.used_vcpus[self.sidx] = v
+
+    @property
+    def used_mem_mb(self) -> int:
+        return int(self.soa.used_mem_mb[self.sidx])
+
+    @used_mem_mb.setter
+    def used_mem_mb(self, v: int) -> None:
+        self.soa.used_mem_mb[self.sidx] = v
+
+    @property
+    def reserved_vcpus(self) -> int:
+        return int(self.soa.reserved_vcpus[self.sidx])
+
+    @reserved_vcpus.setter
+    def reserved_vcpus(self, v: int) -> None:
+        self.soa.reserved_vcpus[self.sidx] = v
+
+    @property
+    def reserved_mem_mb(self) -> int:
+        return int(self.soa.reserved_mem_mb[self.sidx])
+
+    @reserved_mem_mb.setter
+    def reserved_mem_mb(self, v: int) -> None:
+        self.soa.reserved_mem_mb[self.sidx] = v
+
+    @property
+    def active_demand_vcpus(self) -> float:
+        return float(self.soa.active_demand_vcpus[self.sidx])
+
+    @active_demand_vcpus.setter
+    def active_demand_vcpus(self, v: float) -> None:
+        self.soa.active_demand_vcpus[self.sidx] = v
+
+    @property
+    def active_net_gbps(self) -> float:
+        return float(self.soa.active_net_gbps[self.sidx])
+
+    @active_net_gbps.setter
+    def active_net_gbps(self, v: float) -> None:
+        self.soa.active_net_gbps[self.sidx] = v
+
     def fits(self, vcpus: int, mem_mb: int) -> bool:
+        a, i = self.soa, self.sidx
         return (
-            self.used_vcpus + vcpus <= self.vcpu_limit
-            and self.used_mem_mb + mem_mb <= self.total_mem_mb
+            a.used_vcpus[i] + vcpus <= self.vcpu_limit
+            and a.used_mem_mb[i] + mem_mb <= self.total_mem_mb
         )
 
     def acquire(self, vcpus: int, mem_mb: int) -> None:
-        self.used_vcpus += vcpus
-        self.used_mem_mb += mem_mb
+        a, i = self.soa, self.sidx
+        a.used_vcpus[i] += vcpus
+        a.used_mem_mb[i] += mem_mb
         if self.cluster is not None:
             self.cluster.used_vcpus += vcpus
             self.cluster.used_mem_mb += mem_mb
 
     def release(self, vcpus: int, mem_mb: int) -> None:
-        self.used_vcpus -= vcpus
-        self.used_mem_mb -= mem_mb
-        assert self.used_vcpus >= 0 and self.used_mem_mb >= 0
+        a, i = self.soa, self.sidx
+        a.used_vcpus[i] -= vcpus
+        a.used_mem_mb[i] -= mem_mb
+        assert a.used_vcpus[i] >= 0 and a.used_mem_mb[i] >= 0
         if self.cluster is not None:
             self.cluster.used_vcpus -= vcpus
             self.cluster.used_mem_mb -= mem_mb
@@ -128,8 +236,9 @@ class Worker:
     def reserve(self, vcpus: int, mem_mb: int) -> None:
         """Acquire-on-placement: hold capacity for a cold start the
         moment it is placed, before the container finishes warming."""
-        self.reserved_vcpus += vcpus
-        self.reserved_mem_mb += mem_mb
+        a, i = self.soa, self.sidx
+        a.reserved_vcpus[i] += vcpus
+        a.reserved_mem_mb[i] += mem_mb
         if self.cluster is not None:
             self.cluster.reserved_vcpus += vcpus
             self.cluster.reserved_mem_mb += mem_mb
@@ -139,9 +248,10 @@ class Worker:
         """Cold start completed: the reservation becomes a running
         acquisition. used_* already count it, so only the reserved
         slice shrinks."""
-        self.reserved_vcpus -= vcpus
-        self.reserved_mem_mb -= mem_mb
-        assert self.reserved_vcpus >= 0 and self.reserved_mem_mb >= 0
+        a, i = self.soa, self.sidx
+        a.reserved_vcpus[i] -= vcpus
+        a.reserved_mem_mb[i] -= mem_mb
+        assert a.reserved_vcpus[i] >= 0 and a.reserved_mem_mb[i] >= 0
         if self.cluster is not None:
             self.cluster.reserved_vcpus -= vcpus
             self.cluster.reserved_mem_mb -= mem_mb
@@ -153,18 +263,20 @@ class Worker:
         self.release(vcpus, mem_mb)
 
     def add_active(self, demand_vcpus: float, net_gbps: float) -> None:
-        self.active_demand_vcpus += demand_vcpus
-        self.active_net_gbps += net_gbps
+        a, i = self.soa, self.sidx
+        a.active_demand_vcpus[i] += demand_vcpus
+        a.active_net_gbps[i] += net_gbps
 
     def remove_active(self, demand_vcpus: float, net_gbps: float) -> None:
-        self.active_demand_vcpus -= demand_vcpus
-        self.active_net_gbps -= net_gbps
-        assert self.active_demand_vcpus > -1e-6 and self.active_net_gbps > -1e-6
+        a, i = self.soa, self.sidx
+        a.active_demand_vcpus[i] -= demand_vcpus
+        a.active_net_gbps[i] -= net_gbps
+        assert a.active_demand_vcpus[i] > -1e-6 and a.active_net_gbps[i] > -1e-6
         # clamp float drift from repeated +=/-= so long runs stay exact
-        if self.active_demand_vcpus < 1e-9:
-            self.active_demand_vcpus = 0.0
-        if self.active_net_gbps < 1e-9:
-            self.active_net_gbps = 0.0
+        if a.active_demand_vcpus[i] < 1e-9:
+            a.active_demand_vcpus[i] = 0.0
+        if a.active_net_gbps[i] < 1e-9:
+            a.active_net_gbps[i] = 0.0
 
     def idle_warm(self, function: str, now: float) -> List[Container]:
         byf = self.by_function.get(function)
@@ -234,6 +346,11 @@ class Cluster:
                 vcpu_limit=vcpu_limit,
             )
             machines = [uniform] * n_workers
+        # one struct-of-arrays store for the whole cluster: every
+        # Worker below is a single-slot view into it, and bulk readers
+        # (router SLO scoring, tests) vectorize over all workers at once
+        self.arrays = WorkerArrays(len(machines))
+        self.arrays.fill_machine_constants(machines)
         self.workers = [
             Worker(
                 wid=i,
@@ -242,9 +359,40 @@ class Cluster:
                 vcpu_limit=m.limit,
                 machine=m,
                 cluster=self,
+                soa=self.arrays,
+                sidx=i,
             )
             for i, m in enumerate(machines)
         ]
+        # cluster-level mirror of each worker's per-function container
+        # index: warm lookups for a function touch only ITS containers
+        # cluster-wide instead of probing all workers (most hold none).
+        # Iteration order is container-creation order; selection-order
+        # parity with the per-worker scans is restored by explicit
+        # (wid, cid) tie-break keys at the call sites (scheduler,
+        # warming_soon below).
+        self.by_function: Dict[str, Dict[int, Container]] = {}
+        # per-function dict of the IDLE (busy == False) subset of
+        # ``by_function``: warm lookups and warming-soon scans touch
+        # only containers that can actually be candidates, instead of
+        # every container of the function. Maintained eagerly by
+        # mark_busy/mark_idle at each busy flip (two O(1) dict ops per
+        # invocation lifecycle); iteration order is irrelevant because
+        # every reader selects by an explicit total (.., wid, cid) key.
+        self.idle_by_function: Dict[str, Dict[int, Container]] = {}
+
+    def mark_busy(self, c: Container) -> None:
+        """Flip a container busy and drop it from the idle index."""
+        c.busy = True
+        byf = self.idle_by_function.get(c.function)
+        if byf is not None:
+            byf.pop(c.cid, None)
+
+    def mark_idle(self, c: Container) -> None:
+        """Flip a container idle (finish, cancelled cold start, idle
+        creation) and register it in the idle index."""
+        c.busy = False
+        self.idle_by_function.setdefault(c.function, {})[c.cid] = c
 
     def new_container(
         self, worker: Worker, function: str, vcpus: int, mem_mb: int,
@@ -262,6 +410,10 @@ class Cluster:
         )
         worker.containers[c.cid] = c
         worker.by_function.setdefault(function, {})[c.cid] = c
+        self.by_function.setdefault(function, {})[c.cid] = c
+        # containers are created idle; cold-start placement marks the
+        # new container busy immediately after, removing it again
+        self.idle_by_function.setdefault(function, {})[c.cid] = c
         return c
 
     def remove_container(self, c: Container) -> None:
@@ -269,26 +421,61 @@ class Cluster:
         byf = c.worker.by_function.get(c.function)
         if byf is not None:
             byf.pop(c.cid, None)
+        cbf = self.by_function.get(c.function)
+        if cbf is not None:
+            cbf.pop(c.cid, None)
+        ibf = self.idle_by_function.get(c.function)
+        if ibf is not None:
+            ibf.pop(c.cid, None)
 
     def has_idle_warm(self, function: str, now: float) -> bool:
-        """Emptiness probe — the router's warm-spill pre-check; defers
-        to Worker.idle_warm so the predicate has one source of truth."""
-        return any(w.idle_warm(function, now) for w in self.workers)
+        """Emptiness probe — the router's warm-spill pre-check. The
+        cluster-level index holds exactly the union of the per-worker
+        indexes, so the predicate matches Worker.idle_warm; legacy_scans
+        keeps the per-worker probe for A/B."""
+        if self.legacy_scans:
+            return any(w.idle_warm(function, now) for w in self.workers)
+        byf = self.idle_by_function.get(function)
+        if not byf:
+            return False
+        return any(
+            not c.busy and c.warm_at <= now for c in byf.values()
+        )
 
     def warming_soon(self, function: str, now: float, horizon_s: float,
                      vcpus: int, mem_mb: int) -> Optional[Container]:
         """Cluster-wide soonest-warm uncommitted container within the
         horizon whose worker can still take its reservation — the
-        estimate router's warming-soon placement candidate. Defers the
-        per-container predicate (including ``fits``) to
-        :meth:`Worker.warming_soon`."""
-        best: Optional[Container] = None
-        for w in self.workers:
-            c = w.warming_soon(function, now, horizon_s, vcpus, mem_mb)
-            if c is None:
+        estimate router's warming-soon placement candidate. The
+        per-worker scan (kept under ``legacy_scans``) picks per-worker
+        minima by (warm_at, insertion order) and then keeps the earliest
+        worker on ties — i.e. the global min by (warm_at, wid, cid); the
+        indexed path selects by that exact key."""
+        if self.legacy_scans:
+            best: Optional[Container] = None
+            for w in self.workers:
+                c = w.warming_soon(function, now, horizon_s, vcpus, mem_mb)
+                if c is None:
+                    continue
+                if best is None or c.warm_at < best.warm_at:
+                    best = c
+            return best
+        byf = self.idle_by_function.get(function)
+        if not byf:
+            return None
+        best = None
+        best_key = None
+        deadline = now + horizon_s
+        for c in byf.values():
+            if c.busy or c.warm_at <= now or c.warm_at > deadline:
                 continue
-            if best is None or c.warm_at < best.warm_at:
-                best = c
+            if c.vcpus < vcpus or c.mem_mb < mem_mb:
+                continue
+            if not c.worker.fits(c.vcpus, c.mem_mb):
+                continue
+            key = (c.warm_at, c.worker.wid, c.cid)
+            if best_key is None or key < best_key:
+                best, best_key = c, key
         return best
 
     def idle_warm(self, function: str, now: float) -> List[Container]:

@@ -39,7 +39,7 @@ MEM_UNDER_SLOPE = 6.0  # OOM is worse than an SLO miss
 MEM_CLASS_MB = 128  # one class = 128 MB (paper) / 256 MB HBM (TPU mode)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Observation:
     """What the worker daemon reports for one completed invocation."""
 

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.cost_functions import Observation
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InvocationRecord:
     function: str
     invocation_id: int

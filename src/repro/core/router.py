@@ -86,6 +86,8 @@ import dataclasses
 import hashlib
 import math
 import random
+
+import numpy as np
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import Allocation
@@ -110,7 +112,7 @@ EXEC_EWMA_ALPHA = 0.3
 DEFAULT_EXEC_ESTIMATE_S = 1.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class RouteDecision:
     cluster_idx: int
     decision: Decision
@@ -202,6 +204,8 @@ class Router:
             max(sum(w.vcpu_limit for w in cl.workers), 1)
             for cl in self.clusters
         ]
+        # home_cluster is a pure function of the name; memoize the md5
+        self._home_cache: Dict[str, int] = {}
         # observability counters (benchmarks/router_bench + admission_bench)
         self.routed_home = 0
         self.spills_warm = 0  # remote warm container beat a local cold start
@@ -225,8 +229,13 @@ class Router:
         # and gcd(n_clusters, n_workers) > 1, every function homed on
         # cluster k would also home on worker k, collapsing the
         # within-cluster cold-placement spread into packing
-        h = int(hashlib.md5(b"cluster:" + function.encode()).hexdigest(), 16)
-        return h % len(self.clusters)
+        h = self._home_cache.get(function)
+        if h is None:
+            h = int(
+                hashlib.md5(b"cluster:" + function.encode()).hexdigest(), 16
+            ) % len(self.clusters)
+            self._home_cache[function] = h
+        return h
 
     def _load(self, ci: int) -> float:
         """Committed vCPU occupancy fraction — the spill-over target and
@@ -244,10 +253,35 @@ class Router:
         saturation is the schedulers' business, not the front door's."""
         if self.admission == "none":
             return False
-        return all(
-            self._load(ci) >= self.admission_headroom
-            for ci in range(len(self.clusters))
-        )
+        # plain loop, not all(genexpr): this runs once per retry of
+        # every front-door-held arrival, and a saturated fleet retries
+        # in storms — generator frames would dominate the retry cost
+        hr = self.admission_headroom
+        for cl, cap in zip(self.clusters, self._capacity):
+            if cl.used_vcpus / cap < hr:
+                return False
+        return True
+
+    def try_requeue(self) -> bool:
+        """Front-door fast path for RETRIES held by queue-mode
+        admission: when the fleet is still past the headroom,
+        ``route()`` would rebuild the identical queued decision without
+        probing any scheduler — so report "still held" directly,
+        replicating route()'s only side effect in that branch (the
+        ``admission_queue_events`` counter). Returns False in every
+        other admission mode (including "shed", whose retries must
+        reach route() to be dropped) and whenever the fleet has
+        headroom again."""
+        if self.admission != "queue":
+            return False
+        # same test as _admission_reject, inlined: this is the hottest
+        # call in a retry storm (once per held arrival per interval)
+        hr = self.admission_headroom
+        for cl, cap in zip(self.clusters, self._capacity):
+            if cl.used_vcpus / cap < hr:
+                return False
+        self.admission_queue_events += 1
+        return True
 
     # ------------------------------------------------- estimate scoring
     def observe_exec(self, function: str, base_exec_s: float,
@@ -565,14 +599,36 @@ class Router:
         # machine mask that no cluster can actually serve in budget.
         # On a uniform free-link fleet this reduces exactly to the old
         # fleet-min expression.
+        net_fed = (self.network_fed is not None
+                   and self.network_fed(function))
+        own_net = self._net_ewma.get(key, 0.0) if net_fed else 0.0
+        v = float(alloc.vcpus)
+
+        def _cheapest(cl) -> float:
+            a = getattr(cl, "arrays", None)
+            if a is None:
+                # non-SoA cluster stub (tests): scalar fallback
+                return min(
+                    self._slowdown(w, function, alloc.vcpus)
+                    * (exec_est * w.machine.exec_factor)
+                    for w in cl.workers
+                )
+            # vectorized §5 slowdown over the cluster's worker arrays —
+            # elementwise float64 ops match the scalar math bit-for-bit
+            cpu = np.maximum(1.0, (a.active_demand_vcpus + v)
+                             / a.physical_cores)
+            if net_fed:
+                cpu = np.maximum(
+                    cpu,
+                    np.maximum(1.0, (a.active_net_gbps + own_net)
+                               / a.nic_gbps),
+                )
+            return float(np.min(cpu * (exec_est * a.exec_factor)))
+
         est = min(
             self._transfer_s(function, ci, input_mb)
             + self.sched_overhead_s
-            + min(
-                self._slowdown(w, function, alloc.vcpus)
-                * (exec_est * w.machine.exec_factor)
-                for w in cl.workers
-            )
+            + _cheapest(cl)
             for ci, cl in enumerate(self.clusters)
         )
         if (self._exec_obs.get(key, 0) >= ECT_SHED_OBS

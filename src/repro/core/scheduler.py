@@ -36,7 +36,7 @@ from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster, Container, Worker
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Decision:
     container: Optional[Container]
     cold_start: bool
@@ -68,16 +68,30 @@ class ShabariScheduler:
         self.keep_alive_s = keep_alive_s
         self.route_larger = route_larger
         self.background_launch = background_launch
+        # md5 home hashing is deterministic per function name; memoize
+        # it (and the rotated walk order per home slot — the worker list
+        # is fixed for the cluster's lifetime) so the per-placement cost
+        # is two dict hits instead of a digest + list build
+        self._home_cache: dict = {}
+        self._order_cache: dict = {}
 
     # ------------------------------------------------------------ utils
     def _home_worker(self, function: str) -> int:
-        h = int(hashlib.md5(function.encode()).hexdigest(), 16)
-        return h % len(self.cluster.workers)
+        h = self._home_cache.get(function)
+        if h is None:
+            h = int(hashlib.md5(function.encode()).hexdigest(), 16) % len(
+                self.cluster.workers)
+            self._home_cache[function] = h
+        return h
 
     def _workers_from_home(self, function: str) -> List[Worker]:
-        ws = self.cluster.workers
         start = self._home_worker(function)
-        return [ws[(start + i) % len(ws)] for i in range(len(ws))]
+        order = self._order_cache.get(start)
+        if order is None:
+            ws = self.cluster.workers
+            order = [ws[(start + i) % len(ws)] for i in range(len(ws))]
+            self._order_cache[start] = order
+        return order
 
     def _pick_cold_worker(self, function: str, vcpus: int, mem_mb: int) -> Optional[Worker]:
         if self.placement == "hashing":
@@ -120,23 +134,79 @@ class ShabariScheduler:
         binds through this method, so the router's estimate mode scores
         the contention of the worker that will actually serve the
         invocation, not merely *a* warm worker."""
-        warm = self.cluster.idle_warm(function, now)
-        exact = [c for c in warm if c.vcpus == vcpus and c.mem_mb == mem_mb
-                 and c.worker.fits(vcpus, mem_mb)]
-        if exact:
-            exact.sort(key=lambda c: c.last_used)
-            return exact[0]
-        if not self.route_larger:
+        if self.cluster.legacy_scans:
+            # pre-index selection, kept for A/B: materialize the
+            # worker-major warm list and stable-sort it
+            warm = self.cluster.idle_warm(function, now)
+            exact = [c for c in warm if c.vcpus == vcpus and c.mem_mb == mem_mb
+                     and c.worker.fits(vcpus, mem_mb)]
+            if exact:
+                exact.sort(key=lambda c: c.last_used)
+                return exact[0]
+            if not self.route_larger:
+                return None
+            larger = [
+                c for c in warm
+                if c.vcpus >= vcpus and c.mem_mb >= mem_mb
+                and c.worker.fits(c.vcpus, c.mem_mb)
+            ]
+            if not larger:
+                return None
+            larger.sort(key=lambda c: (c.vcpus - vcpus, c.mem_mb - mem_mb))
+            return larger[0]
+        # Indexed path: one pass over the cluster's IDLE containers of
+        # this function (mark_busy/mark_idle keep that index exact), so
+        # busy containers never even surface. Selection parity with the
+        # legacy stable sorts: the worker-major warm list is ordered by
+        # (wid, cid) — worker list order, then per-worker insertion
+        # order, and cids increase with creation time — so "stable sort
+        # by k, take first" is exactly "min by (k, wid, cid)". The
+        # legacy larger-branch also admits exact-size containers, but
+        # an exact-size candidate either passes the identical
+        # fits(vcpus, mem_mb) test (then the exact branch wins with its
+        # (0, 0) size-delta key anyway) or fails it in both branches —
+        # so bucketing exact and strictly-larger separately is safe.
+        idle = self.cluster.idle_by_function.get(function)
+        if not idle:
             return None
-        larger = [
-            c for c in warm
-            if c.vcpus >= vcpus and c.mem_mb >= mem_mb
-            and c.worker.fits(c.vcpus, c.mem_mb)
-        ]
-        if not larger:
-            return None
-        larger.sort(key=lambda c: (c.vcpus - vcpus, c.mem_mb - mem_mb))
-        return larger[0]
+        soa = self.cluster.arrays
+        used_v = soa.used_vcpus
+        used_m = soa.used_mem_mb
+        best_exact = None
+        exact_key = None
+        best_larger = None
+        larger_key = None
+        want_larger = self.route_larger
+        for c in idle.values():
+            if exact_key is not None and c.last_used > exact_key[0]:
+                # the index is insertion-ordered and every insertion
+                # happens at last_used == sim-now, so last_used is
+                # non-decreasing along this iteration: once an exact
+                # fit is in hand, only same-last_used ties can still
+                # beat it on the (last_used, wid, cid) key
+                break
+            if c.busy or c.warm_at > now:
+                continue
+            cv, cm = c.vcpus, c.mem_mb
+            if cv < vcpus or cm < mem_mb:
+                continue
+            w = c.worker
+            i = w.sidx
+            if cv == vcpus and cm == mem_mb:
+                if (used_v[i] + vcpus <= w.vcpu_limit
+                        and used_m[i] + mem_mb <= w.total_mem_mb):
+                    key = (c.last_used, w.wid, c.cid)
+                    if exact_key is None or key < exact_key:
+                        best_exact, exact_key = c, key
+            elif want_larger and best_exact is None:
+                if (used_v[i] + cv <= w.vcpu_limit
+                        and used_m[i] + cm <= w.total_mem_mb):
+                    key = (cv - vcpus, cm - mem_mb, w.wid, c.cid)
+                    if larger_key is None or key < larger_key:
+                        best_larger, larger_key = c, key
+        if best_exact is not None:
+            return best_exact
+        return best_larger
 
     # -------------------------------------------------------- schedule
     def schedule(self, function: str, alloc: Allocation, now: float) -> Decision:

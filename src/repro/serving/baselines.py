@@ -47,9 +47,12 @@ class StaticPolicy(Policy):
         self.vcpus = vcpus
         self.mem_mb = mem_mb
         self.name = name
+        # one shared Allocation: the decision never varies and nothing
+        # downstream mutates it, so per-invocation construction is churn
+        self._alloc = Allocation(vcpus=vcpus, mem_mb=mem_mb)
 
     def allocate(self, arrival, meta, sim):
-        return Allocation(vcpus=self.vcpus, mem_mb=self.mem_mb)
+        return self._alloc
 
 
 class ParrotfishPolicy(Policy):

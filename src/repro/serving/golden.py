@@ -45,6 +45,17 @@ LEGACY_ACQUIRE_SCENARIOS = ("multi-cluster", "oversubscribe", "poisson-steady")
 # asserts, so a numerics drift in either engine trips CI.
 LEGACY_ENGINE_SCENARIOS = ("heavy-tail-inputs",)
 
+# The event-loop A/B: snapshotted under tests/goldens/
+# legacy-event-loop/ with SimConfig(legacy_event_loop=True) — the
+# pre-refactor single-heapq hot loop. Like the engine A/B this is NOT
+# a semantics fork: the snapshot must equal the main golden
+# bit-for-bit (the array-backed loop + calendar queue is a pure fast
+# path), which tests/test_event_loop.py asserts, so drift in either
+# loop trips CI. oversubscribe is the pin because its golden exercises
+# retries, sheds, and queue timeouts — the event classes the fast
+# loop's merge logic reorders most easily if it is wrong.
+LEGACY_EVENT_LOOP_SCENARIOS = ("oversubscribe",)
+
 # The completion-time-estimate routing mode: snapshotted under
 # tests/goldens/estimate-routing/ with SimConfig(routing="estimate"),
 # so the new front-door policy is regression-pinned independently while
@@ -134,12 +145,15 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
 
 def run_golden(scenario: str, *, legacy_acquire: bool = False,
                legacy_engine: bool = False,
-               estimate_routing: bool = False) -> Dict[str, float]:
+               estimate_routing: bool = False,
+               legacy_event_loop: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     cfg = golden_sim_config(scenario)
     if legacy_acquire:
         cfg = dataclasses.replace(cfg, legacy_acquire=True)
     if estimate_routing:
         cfg = dataclasses.replace(cfg, routing="estimate")
+    if legacy_event_loop:
+        cfg = dataclasses.replace(cfg, legacy_event_loop=True)
     policy = "shabari-legacy-engine" if legacy_engine else GOLDEN_POLICY
     return run_scenario(policy, spec, sim_cfg=cfg).summary

@@ -64,6 +64,20 @@ class FunctionProfile:
         # time-weighted peak: during the parallel phase, par cores are busy
         return min(float(vcpus), par)
 
+    def exec_and_demand(self, meta: Dict, vcpus: int,
+                        rng: np.random.Generator) -> Tuple[float, float]:
+        """Fused ``(exec_time(contention=1), vcpus_used)`` — one pass
+        over the per-input lambdas instead of two (the simulator's hot
+        start path calls both for every invocation). Identical values
+        and the identical single rng draw."""
+        v = float(vcpus)
+        par = max(1.0, min(v, self.max_parallelism(meta)))
+        pw = self.parallel(meta)
+        t = self.t0 + self.serial(meta) + pw / par
+        sigma = self.noise_base + self.noise_size_coef * self.size_scale(meta)
+        t *= float(rng.lognormal(mean=0.0, sigma=sigma))
+        return t, (1.0 if pw <= 0 else min(v, par))
+
     def mem_used_mb(self, meta: Dict) -> float:
         return self.mem_mb(meta)
 
@@ -72,14 +86,21 @@ def _mb(x: float) -> float:
     return x / 1e6
 
 
+_BASE_CACHE: Dict[str, str] = {}
+
+
 def base_function(fn: str) -> str:
     """Strip a clone suffix (``matmult::3`` -> ``matmult``).
 
     Scenario generators (cold-storm) clone the 12 paper functions into
     many independently-named aliases; everything keyed on the function's
     BEHAVIOR (profile shape, network-fed set, input-size model) must
-    look through the alias."""
-    return fn.split("::", 1)[0]
+    look through the alias. Memoized — the hot loop asks per event and
+    the alias universe is small."""
+    base = _BASE_CACHE.get(fn)
+    if base is None:
+        base = _BASE_CACHE[fn] = fn.split("::", 1)[0]
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -136,8 +157,10 @@ def build_profiles() -> Dict[str, FunctionProfile]:
         name="videoprocess", input_type="video", t0=0.3,
         serial=lambda m: 0.04 * m["duration"],
         parallel=lambda m: 1.9e-6 * m["bitrate"] * m["duration"] / 8.0,
-        max_parallelism=lambda m: float(
-            np.clip(56.0 * 9.2e5 / (m["width"] * m["height"]), 6.0, 48.0)
+        # scalar min/max == np.clip here (clip is min(hi, max(x, lo)))
+        # without the per-call ufunc dispatch on a python float
+        max_parallelism=lambda m: min(
+            48.0, max(56.0 * 9.2e5 / (m["width"] * m["height"]), 6.0)
         ),
         mem_mb=lambda m: 90.0 + 9e-6 * m["width"] * m["height"] * 24
         + 2e-7 * m["bitrate"],

@@ -54,15 +54,18 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cluster import Cluster, Container, Worker
 from repro.core.cost_functions import Observation
-from repro.core.daemon import UtilizationTrace, WorkerDaemon, synth_trace
+from repro.core.daemon import (SAMPLE_INTERVAL_S, UtilizationTrace,
+                               WorkerDaemon, synth_trace)
 from repro.core.fleet import FleetSpec, MachineType
-from repro.core.metadata_store import MetadataStore
+from repro.core.metadata_store import InvocationRecord, MetadataStore
+from repro.serving.event_queue import CalendarQueue
 from repro.serving.profiles import FunctionProfile, base_function, input_size_mb
 from repro.serving.workload import Arrival
 
@@ -177,6 +180,19 @@ class SimConfig:
     # fleet) and charges arrival→cluster input-payload transfer time on
     # remote placements over non-free links.
     fleet: Optional[FleetSpec] = None
+    # Compatibility switch for A/B benchmarking (benchmarks/sim_bench
+    # scale tier) and equality testing (tests/test_event_loop.py):
+    # restore the pre-refactor hot loop — one global heapq over every
+    # event (arrivals pre-pushed, so a 24 h trace seeds a million-entry
+    # heap) and the full synth_trace utilization series per completion —
+    # instead of the array-backed loop (arrival stream kept as a sorted
+    # array, calendar-bucketed queue for scheduled events, slim daemon
+    # path that draws the identical rng stream without materializing
+    # samples nobody reads). Metrics and goldens are byte-identical
+    # either way; only speed differs. The same flush-before-read
+    # discipline applies on both paths (pending agent updates flush
+    # before any same-function prediction).
+    legacy_event_loop: bool = False
     # Estimate-mode A/B for the fleet refactor: when True (default) the
     # router PRICES the same input-payload transfer time the simulator
     # charges on remote placements (plus each machine's cold curve and
@@ -188,7 +204,7 @@ class SimConfig:
     estimate_transfer: bool = True
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InvocationResult:
     invocation_id: int
     function: str
@@ -262,7 +278,7 @@ class Policy:
         pass
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Running:
     result: InvocationResult
     container: Container
@@ -394,10 +410,34 @@ class Simulator:
         assert self.cfg.contention_mode in ("snapshot", "dynamic")
         self.events_processed = 0
         self.now = 0.0
+        # array-backed loop state: the calendar queue replaces the
+        # global heap while _run_fast is active (None = legacy heap);
+        # the slim daemon path replays synth_trace's exact rng draws
+        # without materializing utilization samples nobody reads
+        self._queue: Optional[CalendarQueue] = None
+        self._retry_q: Optional[deque] = None
+        self._slim_daemon = not self.cfg.legacy_event_loop
+        self._rng_advance = isinstance(self.rng.bit_generator,
+                                       np.random.PCG64)
+        self._zero_feat = np.zeros(1, np.float32)
+        self._run_pool: List[_Running] = []
 
     # ------------------------------------------------------------ events
     def _push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+        ev = (t, next(self._seq), kind, payload)
+        q = self._queue
+        if q is not None:
+            if kind == "arrival":
+                # retry lane: every arrival re-push is scheduled at
+                # now + retry_interval_s with now non-decreasing and
+                # seq strictly increasing, so append order IS (t, seq)
+                # order — a deque replaces a heap for the storm-hot
+                # event class (_run_fast merges it back in)
+                self._retry_q.append(ev)
+            else:
+                q.push(ev)
+        else:
+            heapq.heappush(self._events, ev)
 
     # ------------------------------------------------------------ helpers
     def cold_latency(self, vcpus: int, mem_mb: int,
@@ -419,8 +459,9 @@ class Simulator:
                 r.net_gbps for r in self._running.values() if r.worker is w
             )
         else:
-            demand = extra_demand + w.active_demand_vcpus
-            net = extra_net + w.active_net_gbps
+            soa, i = w.soa, w.sidx
+            demand = extra_demand + float(soa.active_demand_vcpus[i])
+            net = extra_net + float(soa.active_net_gbps[i])
         cpu_slow = max(1.0, demand / w.machine.physical_cores)
         net_slow = (max(1.0, net / w.machine.nic_gbps)
                     if base_function(fn) in NETWORK_FED else 1.0)
@@ -465,25 +506,48 @@ class Simulator:
 
     def _on_arrival(self, arrival: Arrival, first_seen: float,
                     alloc=None, aux=None) -> None:
-        meta = self.input_pool[arrival.function][arrival.input_idx]
+        # meta is resolved lazily: a front-door-held retry bounces off
+        # the admission fast path below without ever reading its input
         now = self.now
-        if self.cfg.legacy_retry_alloc:
+        cfg = self.cfg
+        meta = None
+        if cfg.legacy_retry_alloc:
             # pre-fix retry path kept for A/B benchmarking (sim_bench):
             # re-predict on every retry, even when about to time out.
             # The featurized input + input size ride the retry payload
             # (aux), so only the PREDICT re-runs — not the Featurizer.
+            meta = self.input_pool[arrival.function][arrival.input_idx]
             alloc, aux = self.policy.allocate_with_aux(
                 arrival, meta, self, aux)
-        if now - first_seen > self.cfg.queue_timeout_s:
+        if now - first_seen > cfg.queue_timeout_s:
             # the cached allocation from the first attempt is reported;
             # a timed-out invocation never touches the policy again
             if alloc is None:  # only reachable with queue_timeout_s <= 0
+                meta = self.input_pool[arrival.function][arrival.input_idx]
                 alloc, aux = self.policy.allocate_with_aux(
                     arrival, meta, self, aux)
             self._record_terminal(arrival, alloc, first_seen, timed_out=True)
             return
         if alloc is None:
+            meta = self.input_pool[arrival.function][arrival.input_idx]
             alloc, aux = self.policy.allocate_with_aux(arrival, meta, self, aux)
+        elif self.router.try_requeue():
+            # retry of a front-door-held arrival while the fleet is
+            # still past the queue-mode admission headroom: route()
+            # would rebuild the same queued decision without touching
+            # any scheduler, so skip straight to the re-push (shared by
+            # both event loops — bit-identical to the long way around;
+            # _push is inlined because retry storms make this the
+            # hottest line of a saturated large-fleet simulation)
+            ev = (now + cfg.retry_interval_s, next(self._seq), "arrival",
+                  (arrival, first_seen, alloc, aux))
+            if self._queue is not None:
+                self._retry_q.append(ev)  # FIFO retry lane (see _push)
+            else:
+                heapq.heappush(self._events, ev)
+            return
+        if meta is None:
+            meta = self.input_pool[arrival.function][arrival.input_idx]
 
         # per-input ECT + SLO-native admission: the router sees the
         # invocation's cached features and its REMAINING SLO budget
@@ -528,7 +592,7 @@ class Simulator:
             # invocation pays only the residual warm-up (and, remotely,
             # whatever of the payload transfer the warm-up doesn't hide).
             c = decision.pending
-            c.busy = True
+            c.worker.cluster.mark_busy(c)
             if not self.cfg.legacy_acquire:
                 c.worker.reserve(c.vcpus, c.mem_mb)
                 c.reserved = True
@@ -552,7 +616,7 @@ class Simulator:
             if xfer > 0.0:
                 # warm container on a remote cluster: hold it while the
                 # payload crosses the link, then start
-                c.busy = True
+                cluster.mark_busy(c)
                 c.last_used = now
                 self._push(now + xfer, "xfer_start",
                            (arrival, meta, alloc, c, first_seen, aux))
@@ -567,7 +631,7 @@ class Simulator:
             lat = self.cold_latency(v, m, w.machine)
             c = cluster.new_container(w, arrival.function, v, m, now,
                                       warm_at=now + lat)
-            c.busy = True
+            cluster.mark_busy(c)
             if not self.cfg.legacy_acquire:
                 # acquire-on-placement: hold the capacity for the whole
                 # warm-up window (converted to a running acquisition in
@@ -588,9 +652,9 @@ class Simulator:
         itself survives as an idle warm container — the capacity was
         spent warming it, so future invocations may as well reuse it."""
         c.reserved = False
-        c.busy = False
         c.last_used = self.now
         c.worker.cancel_reservation(c.vcpus, c.mem_mb)
+        c.worker.cluster.mark_idle(c)
         self._record_terminal(arrival, alloc, first_seen, timed_out=True)
 
     def _start(self, arrival, meta, alloc, container: Container, *, cold: bool,
@@ -600,7 +664,7 @@ class Simulator:
         fn = arrival.function
         prof = self.profiles[fn]
         w = container.worker
-        container.busy = True
+        w.cluster.mark_busy(container)
         container.last_used = now
         if container.reserved:
             # acquire-on-placement: the capacity was reserved when the
@@ -616,9 +680,8 @@ class Simulator:
         # estimator); the worker's exec-speed factor scales it to this
         # machine's uncontended time before contention applies.
         vcpus = container.vcpus
-        base_exec = prof.exec_time(meta, vcpus, self.rng, contention=1.0)
+        base_exec, demand = prof.exec_and_demand(meta, vcpus, self.rng)
         eff_exec = base_exec * w.machine.exec_factor
-        demand = prof.vcpus_used(meta, vcpus)
         net = self._net_demand(fn, meta, eff_exec, w.machine.nic_gbps)
         slow = self._contention(w, fn, demand, net)
         exec_s = eff_exec * slow
@@ -640,11 +703,30 @@ class Simulator:
             oom_killed=oom, exec_s=exec_s,
         )
         feats, in_mb = self._aux_features(aux)
-        run = _Running(
-            result=res, container=container, worker=w,
-            demand_vcpus=demand, net_gbps=net, arrival=arrival, meta=meta,
-            base_exec=base_exec, features=feats, input_mb=in_mb,
-        )
+        pool = self._run_pool
+        if pool:
+            # recycled record (churn cut): every field re-set here
+            run = pool.pop()
+            run.result = res
+            run.container = container
+            run.worker = w
+            run.demand_vcpus = demand
+            run.net_gbps = net
+            run.arrival = arrival
+            run.meta = meta
+            run.base_exec = base_exec
+            run.features = feats
+            run.input_mb = in_mb
+            run.base_remaining = 0.0
+            run.slow = 1.0
+            run.last_t = 0.0
+            run.gen = 0
+        else:
+            run = _Running(
+                result=res, container=container, worker=w,
+                demand_vcpus=demand, net_gbps=net, arrival=arrival, meta=meta,
+                base_exec=base_exec, features=feats, input_mb=in_mb,
+            )
         self._running[arrival.invocation_id] = run
         self._worker_running[w.wid][arrival.invocation_id] = run
         w.add_active(demand, net)
@@ -690,20 +772,57 @@ class Simulator:
         if self.dynamic:
             res.exec_s = now - res.start_t
         w.release(c.vcpus, c.mem_mb)
-        c.busy = False
         c.last_used = now
+        w.cluster.mark_idle(c)
         self.results.append(res)
 
-        trace = synth_trace(res.used_vcpus, res.used_mem_mb, res.exec_s, self.rng)
-        obs = self.daemon.report_completion(
-            function=res.function, invocation_id=res.invocation_id,
-            features=np.zeros(1, np.float32),  # policy recomputes if needed
-            exec_time_s=now - res.arrival_t,  # end-to-end vs SLO
-            slo_s=res.slo_s, alloc_vcpus=res.alloc_vcpus,
-            alloc_mem_mb=res.alloc_mem_mb, trace=trace,
-            finish_time=now, cold_start=res.cold_start,
-            oom_killed=res.oom_killed,
-        )
+        if self._slim_daemon:
+            # Array-backed loop's daemon path: nothing downstream reads
+            # the UtilizationTrace SAMPLES — only its maxima, which
+            # synth_trace forces to exactly (used_vcpus, used_mem_mb)
+            # via the argmax write. So draw the identical rng stream
+            # (two random(n) batches, same n) to keep the shared
+            # generator bit-aligned with the legacy path, and build the
+            # Observation/record directly with the interned zero
+            # feature vector instead of allocating one per completion.
+            n_smp = max(int(res.exec_s / SAMPLE_INTERVAL_S), 4)
+            n_smp = min(n_smp, 4096)
+            if self._rng_advance:
+                # PCG64's random(n) consumes exactly n raw uint64s, so
+                # jumping the state 2*n forward is bit-identical to the
+                # two jitter batches synth_trace would have drawn —
+                # O(log n) instead of generating values nothing reads
+                self.rng.bit_generator.advance(2 * n_smp)
+            else:
+                self.rng.random(n_smp)
+                self.rng.random(n_smp)
+            obs = Observation(
+                exec_time_s=now - res.arrival_t,  # end-to-end vs SLO
+                slo_s=res.slo_s,
+                alloc_vcpus=res.alloc_vcpus,
+                max_vcpus_used=res.used_vcpus,
+                alloc_mem_mb=res.alloc_mem_mb,
+                max_mem_used_mb=res.used_mem_mb,
+                cold_start=res.cold_start,
+                oom_killed=res.oom_killed,
+            )
+            self.store.push(InvocationRecord(
+                function=res.function, invocation_id=res.invocation_id,
+                features=self._zero_feat, observation=obs,
+                finish_time=now,
+            ))
+        else:
+            trace = synth_trace(res.used_vcpus, res.used_mem_mb, res.exec_s,
+                                self.rng)
+            obs = self.daemon.report_completion(
+                function=res.function, invocation_id=res.invocation_id,
+                features=np.zeros(1, np.float32),  # policy recomputes if needed
+                exec_time_s=now - res.arrival_t,  # end-to-end vs SLO
+                slo_s=res.slo_s, alloc_vcpus=res.alloc_vcpus,
+                alloc_mem_mb=res.alloc_mem_mb, trace=trace,
+                finish_time=now, cold_start=res.cold_start,
+                oom_killed=res.oom_killed,
+            )
         self.policy.feedback(arrival, meta, res, self)
         # estimator calibration: report the UNCONTENDED exec time and
         # the NIC draw so estimate-mode scoring can apply each
@@ -719,9 +838,72 @@ class Simulator:
                                      input_mb=run.input_mb)
         if self.dynamic:
             self._retime_worker(w)  # departures speed co-runners up
+        # recycle the bookkeeping record (the result object lives on in
+        # self.results; only references are cleared, nothing is mutated)
+        run.result = None
+        run.container = None
+        run.worker = None
+        run.arrival = None
+        run.meta = None
+        run.features = None
+        self._run_pool.append(run)
 
     # ------------------------------------------------------------ run
     def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
+        if self.cfg.legacy_event_loop:
+            return self._run_legacy(arrivals)
+        return self._run_fast(arrivals)
+
+    def _process_arrival_cohort(self, t: float, payloads: list) -> None:
+        """Handle one same-timestamp arrival cohort in event order —
+        shared by both loops. Microbatching every CONSECUTIVE same-
+        timestamp arrival is bit-identical to processing them one by
+        one: nothing can be interleaved between them (an intervening
+        finish/warm_start would break the cohort), and pending agent
+        updates flush before any prediction for the same function."""
+        if len(payloads) > 1 and not self.cfg.legacy_retry_alloc:
+            fresh = [
+                (a, self.input_pool[a.function][a.input_idx])
+                for a, fs, alloc, _ in payloads
+                if alloc is None
+                and t - fs <= self.cfg.queue_timeout_s
+            ]
+            if len(fresh) > 1:
+                self.policy.begin_arrival_batch(fresh, self)
+        for arrival, first_seen, alloc, aux in payloads:
+            self._on_arrival(arrival, first_seen, alloc, aux)
+
+    def _handle_scheduled(self, t: float, kind: str, payload) -> None:
+        """Dispatch one non-arrival, non-reap event (both loops)."""
+        if kind == "warm_start":
+            arrival, meta, alloc, c, lat, first_seen, aux = payload
+            if c.reserved and t - first_seen > self.cfg.queue_timeout_s:
+                # reservation outlived the queue timeout (only
+                # possible when cold latency > remaining budget)
+                self._cancel_cold_start(arrival, alloc, c, first_seen)
+            else:
+                # container finished cold-starting; run the
+                # invocation (_start re-marks busy + commits the
+                # reservation / acquires load)
+                c.busy = False
+                self._start(arrival, meta, alloc, c, cold=True,
+                            first_seen=first_seen, cold_latency=lat,
+                            aux=aux)
+        elif kind == "xfer_start":
+            # remote warm placement: the input payload finished
+            # crossing the inter-cluster link; run on the warm
+            # container that was held for it (_start re-marks busy)
+            arrival, meta, alloc, c, first_seen, aux = payload
+            c.busy = False
+            self._start(arrival, meta, alloc, c, cold=False,
+                        first_seen=first_seen, aux=aux)
+        else:  # finish
+            arrival, meta, gen = payload
+            self._on_finish(arrival, meta, gen)
+
+    def _run_legacy(self, arrivals: List[Arrival]) -> List[InvocationResult]:
+        """Pre-refactor hot loop (``legacy_event_loop=True``): one
+        global heapq with every arrival pre-pushed."""
         for a in arrivals:
             self._push(a.t, "arrival", (a, a.t, None, None))
         reap_t = 60.0
@@ -731,57 +913,140 @@ class Simulator:
             self.now = t
             self.events_processed += 1
             if kind == "arrival":
-                # microbatch every CONSECUTIVE same-timestamp arrival:
-                # nothing can be interleaved between them (an intervening
-                # finish/warm_start would break the batch), so
-                # prefetching their allocations in one fused dispatch is
-                # bit-identical to processing them one by one
                 payloads = [payload]
                 while (self._events and self._events[0][0] == t
                        and self._events[0][2] == "arrival"):
                     payloads.append(heapq.heappop(self._events)[3])
                 self.events_processed += len(payloads) - 1
-                if len(payloads) > 1 and not self.cfg.legacy_retry_alloc:
-                    fresh = [
-                        (a, self.input_pool[a.function][a.input_idx])
-                        for a, fs, alloc, _ in payloads
-                        if alloc is None
-                        and t - fs <= self.cfg.queue_timeout_s
-                    ]
-                    if len(fresh) > 1:
-                        self.policy.begin_arrival_batch(fresh, self)
-                for arrival, first_seen, alloc, aux in payloads:
-                    self._on_arrival(arrival, first_seen, alloc, aux)
-            elif kind == "warm_start":
-                arrival, meta, alloc, c, lat, first_seen, aux = payload
-                if c.reserved and t - first_seen > self.cfg.queue_timeout_s:
-                    # reservation outlived the queue timeout (only
-                    # possible when cold latency > remaining budget)
-                    self._cancel_cold_start(arrival, alloc, c, first_seen)
-                else:
-                    # container finished cold-starting; run the
-                    # invocation (_start re-marks busy + commits the
-                    # reservation / acquires load)
-                    c.busy = False
-                    self._start(arrival, meta, alloc, c, cold=True,
-                                first_seen=first_seen, cold_latency=lat,
-                                aux=aux)
-            elif kind == "xfer_start":
-                # remote warm placement: the input payload finished
-                # crossing the inter-cluster link; run on the warm
-                # container that was held for it (_start re-marks busy)
-                arrival, meta, alloc, c, first_seen, aux = payload
-                c.busy = False
-                self._start(arrival, meta, alloc, c, cold=False,
-                            first_seen=first_seen, aux=aux)
-            elif kind == "finish":
-                arrival, meta, gen = payload
-                self._on_finish(arrival, meta, gen)
+                self._process_arrival_cohort(t, payloads)
             elif kind == "reap":
                 for sched in self.schedulers:
                     sched.reap_idle(self.now)
                 if self._events:
                     self._push(self.now + 60.0, "reap", None)
+            else:
+                self._handle_scheduled(t, kind, payload)
+        return self.results
+
+    def _run_fast(self, arrivals: List[Arrival]) -> List[InvocationResult]:
+        """Array-backed hot loop (the default). The trace's arrivals
+        never enter a priority queue: a stable argsort over their
+        timestamps IS their pop order (ties keep list order, exactly
+        the ``(t, seq)`` order the legacy heap gave them, since legacy
+        seqs were assigned in list order). Scheduled events (finish /
+        warm_start / xfer_start / reap) go through a bucketed
+        :class:`CalendarQueue` whose pop order matches a global heap.
+        Retries get a THIRD lane, a plain deque: every arrival re-push
+        is scheduled at ``now + retry_interval_s`` with ``now``
+        non-decreasing and seq strictly increasing, so append order is
+        already ``(t, seq)`` order and no heap is needed for the event
+        class that dominates a saturated run. The three streams merge
+        on ``(t, seq)``: virtual arrival seqs are their list indices
+        (all < n), and ``self._seq`` starts at n, so every scheduled
+        event sorts after every same-timestamp fresh arrival — as it
+        did under the single heap."""
+        n = len(arrivals)
+        self._seq = itertools.count(n)  # seqs 0..n-1 belong to arrivals
+        self._queue = q = CalendarQueue()
+        self._retry_q = rq = deque()
+        try:
+            if n:
+                order = np.argsort(
+                    np.array([a.t for a in arrivals], dtype=np.float64),
+                    kind="stable",
+                ).tolist()
+            else:
+                order = []
+            self._push(60.0, "reap", None)  # seq n, as under the heap
+            ai = 0
+            while ai < n or q or rq:
+                head = q.peek()
+                # effective scheduled head = min over both lanes
+                head_is_retry = False
+                if rq:
+                    r = rq[0]
+                    if head is None or r[0] < head[0] or (
+                            r[0] == head[0] and r[1] < head[1]):
+                        head = r
+                        head_is_retry = True
+                if ai < n:
+                    oi = order[ai]
+                    a = arrivals[oi]
+                    # oi < n <= any queued seq: fresh arrival wins ties
+                    if head is None or a.t < head[0] or (
+                            a.t == head[0] and oi < head[1]):
+                        t = a.t
+                        self.now = t
+                        ai += 1
+                        payloads = [(a, t, None, None)]
+                        while ai < n:
+                            b = arrivals[order[ai]]
+                            if b.t != t:
+                                break
+                            payloads.append((b, t, None, None))
+                            ai += 1
+                        # retries at the same t (their seqs all exceed
+                        # every fresh arrival's) extend the cohort
+                        # while they are the globally next events — a
+                        # calendar event at the same t with a smaller
+                        # seq breaks the consecutive run, exactly as it
+                        # broke the run the heap popped
+                        if rq and rq[0][0] == t:
+                            ch = q.peek()
+                            while rq:
+                                r = rq[0]
+                                if r[0] != t or (ch is not None
+                                                 and ch[0] == t
+                                                 and ch[1] < r[1]):
+                                    break
+                                payloads.append(r[3])
+                                rq.popleft()
+                        self.events_processed += len(payloads)
+                        self._process_arrival_cohort(t, payloads)
+                        continue
+                if head_is_retry:
+                    t, _, _k, payload = rq.popleft()
+                    self.now = t
+                    self.events_processed += 1
+                    nxt = rq[0] if rq else None
+                    if nxt is None or nxt[0] != t:
+                        # lone retry — the common case in a retry storm
+                        # (retry timestamps inherit their arrival's
+                        # fractional offset, so they rarely collide);
+                        # identical to a single-payload cohort, minus
+                        # the list build
+                        a, fs, al, ax = payload
+                        self._on_arrival(a, fs, al, ax)
+                    else:
+                        # retry-only cohort: drain same-t retries while
+                        # no same-t calendar event with a smaller seq
+                        # intervenes (heap-run parity, as above)
+                        ch = q.peek()
+                        payloads = [payload]
+                        while rq:
+                            r = rq[0]
+                            if r[0] != t or (ch is not None
+                                             and ch[0] == t
+                                             and ch[1] < r[1]):
+                                break
+                            payloads.append(r[3])
+                            rq.popleft()
+                        self.events_processed += len(payloads) - 1
+                        self._process_arrival_cohort(t, payloads)
+                    continue
+                t, _, kind, payload = q.pop()
+                self.now = t
+                self.events_processed += 1
+                if kind == "reap":
+                    for sched in self.schedulers:
+                        sched.reap_idle(t)
+                    if ai < n or q or rq:
+                        self._push(t + 60.0, "reap", None)
+                else:
+                    self._handle_scheduled(t, kind, payload)
+        finally:
+            self._queue = None
+            self._retry_q = None
         return self.results
 
 

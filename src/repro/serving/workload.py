@@ -35,7 +35,7 @@ import numpy as np
 _inv_ids = itertools.count()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Arrival:
     invocation_id: int
     t: float
@@ -231,6 +231,45 @@ def _azure(spec: ScenarioSpec, functions, inputs_per_function, rng):
         duration_s=spec.duration_s, seed=spec.seed,
         uniform_popularity=bool(spec.param("uniform_popularity", 0)),
     )
+
+
+@register_scenario("azure-24h")
+def _azure_24h(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """A full production day at Azure-trace scale, for the ``scale``
+    benchmark tier (benchmarks/sim_bench): one diurnal cycle across the
+    window (trough at the start, peak mid-window) times the trace's
+    lognormal per-minute bursts, Zipf popularity. At the default
+    ``peak_mult`` the peak minutes offer several times the fleet's
+    serviceable rate, so the cell exercises admission control and
+    front-door queueing the way a real overload day does. The whole
+    trace is synthesized vectorized at build time — per-minute
+    multinomial counts, one uniform draw per arrival — never per-event,
+    so a ≥1M-invocation day builds in seconds. params: peak_mult
+    (peak-to-trough ratio, default 6.0), burst_sigma (per-minute
+    lognormal sigma, default 0.45)."""
+    peak_mult = max(spec.param("peak_mult", 6.0), 1.0)
+    burst_sigma = spec.param("burst_sigma", 0.45)
+    n_minutes = int(np.ceil(spec.duration_s / 60.0))
+    # sinusoid from trough 1.0 to peak ``peak_mult`` over one cycle
+    phase = 2.0 * np.pi * np.arange(n_minutes) / n_minutes
+    base = 1.0 + (peak_mult - 1.0) * 0.5 * (1.0 - np.cos(phase))
+    burst = rng.lognormal(mean=0.0, sigma=burst_sigma, size=n_minutes)
+    w = base * burst
+    w = w / w.sum()
+    total = int(round(spec.rps * spec.duration_s))
+    per_minute = rng.multinomial(total, w)
+    pop = function_popularity(functions, rng)
+
+    m_idx = np.repeat(np.arange(n_minutes), per_minute)
+    times = (m_idx + rng.random(total)) * 60.0
+    times.sort(kind="stable")
+    fis = rng.choice(len(functions), size=total, p=pop)
+    n_inputs = np.array([inputs_per_function[f] for f in functions])
+    idxs = rng.integers(0, n_inputs[fis])
+    return [
+        Arrival(next(_inv_ids), float(t), functions[fi], int(ix))
+        for t, fi, ix in zip(times, fis, idxs)
+    ]
 
 
 @register_scenario("poisson-steady")

@@ -1,0 +1,249 @@
+"""Array-backed event loop vs the legacy single-heapq loop.
+
+The fast loop (``SimConfig(legacy_event_loop=False)``, the default) is
+a pure fast path: sorted-array arrivals + calendar-queue scheduled
+events + a FIFO retry lane must replay the exact event sequence the
+global heap produced. These tests pin that equivalence end to end
+(per-field ``InvocationResult`` equality on scenarios that exercise
+retries, front-door sheds, and warming-soon binds), pin the
+same-timestamp cohort partition both loops feed the policy batch hook,
+and pin the :class:`CalendarQueue` boundary cases (including pushing
+into the bucket currently being drained, and pushing an event EARLIER
+than the cached head bucket).
+
+The committed golden under tests/goldens/legacy-event-loop/ must stay
+byte-identical to the main golden of the same scenario — unlike the
+legacy-acquire fork, the two loops are one semantics.
+"""
+
+import dataclasses
+import heapq
+import json
+import os
+import random
+
+import pytest
+
+from repro.serving import baselines as B
+from repro.serving.event_queue import CalendarQueue
+from repro.serving.experiment import make_policy
+from repro.serving.golden import (LEGACY_EVENT_LOOP_SCENARIOS,
+                                  golden_sim_config, golden_specs)
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import InvocationResult, SimConfig, Simulator
+from repro.serving.workload import Arrival, generate_scenario
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+FIELDS = [f.name for f in dataclasses.fields(InvocationResult)]
+
+
+def _build_stack():
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo = B.build_slo_table(profiles, pool)
+    return profiles, pool, slo
+
+
+def _run_loop(policy, spec, cfg, legacy):
+    profiles, pool, slo = _build_stack()
+    trace = generate_scenario(
+        spec, functions=sorted(profiles),
+        inputs_per_function={f: len(pool[f]) for f in profiles})
+    cfg = dataclasses.replace(cfg, legacy_event_loop=legacy)
+    pol = make_policy(policy, profiles, pool, slo, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                    slo_table=slo, cfg=cfg)
+    return sim, sim.run(trace)
+
+
+def _assert_field_equal(fast, legacy):
+    assert len(fast) == len(legacy)
+    for a, b in zip(fast, legacy):
+        for f in FIELDS:
+            assert getattr(a, f) == getattr(b, f), (
+                f"invocation {a.invocation_id} field {f}: "
+                f"fast={getattr(a, f)!r} legacy={getattr(b, f)!r}")
+
+
+# ---------------------------------------------------- full-sim equality
+def test_equal_oversubscribe_retry_storm():
+    """Saturating cell with queue-mode admission: retries (both
+    capacity-queued and front-door-held), timeouts, and the retry FIFO
+    lane all in play, under the learning policy."""
+    spec = golden_specs()["oversubscribe"]
+    cfg = dataclasses.replace(
+        golden_sim_config("oversubscribe"),
+        admission="queue", admission_headroom=0.5)
+    sim_f, fast = _run_loop("shabari", spec, cfg, legacy=False)
+    sim_l, legacy = _run_loop("shabari", spec, cfg, legacy=True)
+    assert sim_f.events_processed == sim_l.events_processed
+    assert sim_f.router.admission_queue_events > 0  # front-door holds
+    assert any(r.timed_out for r in fast)  # retries actually timed out
+    _assert_field_equal(fast, legacy)
+
+
+def test_equal_flash_crowd_sheds():
+    """Shed-mode admission on the spike scenario: terminal front-door
+    drops must land on the same invocations in both loops."""
+    spec = golden_specs()["flash-crowd"]
+    cfg = dataclasses.replace(
+        golden_sim_config("flash-crowd"),
+        admission="shed", admission_headroom=0.5)
+    sim_f, fast = _run_loop("static-large", spec, cfg, legacy=False)
+    sim_l, legacy = _run_loop("static-large", spec, cfg, legacy=True)
+    assert sim_f.router.admission_shed > 0
+    assert any(r.shed for r in fast)
+    _assert_field_equal(fast, legacy)
+
+
+def test_equal_estimate_routing_warming_binds():
+    """Estimate routing on the multi-cluster golden cell: invocations
+    bound to still-warming containers (pending commits + reservation
+    cancellation on timeout) must replay identically."""
+    spec = golden_specs()["multi-cluster"]
+    cfg = dataclasses.replace(
+        golden_sim_config("multi-cluster"), routing="estimate")
+    sim_f, fast = _run_loop("shabari", spec, cfg, legacy=False)
+    sim_l, legacy = _run_loop("shabari", spec, cfg, legacy=True)
+    assert sim_f.router.binds_warming > 0  # the path is exercised
+    assert sim_f.router.binds_warming == sim_l.router.binds_warming
+    _assert_field_equal(fast, legacy)
+
+
+def test_legacy_event_loop_golden_is_byte_identical():
+    """The pinned legacy-event-loop snapshot equals the main golden —
+    the two loops are one semantics, not a fork."""
+    for scenario in LEGACY_EVENT_LOOP_SCENARIOS:
+        with open(os.path.join(GOLDEN_DIR, f"{scenario}.json")) as f:
+            main = json.load(f)
+        with open(os.path.join(
+                GOLDEN_DIR, "legacy-event-loop", f"{scenario}.json")) as f:
+            legacy = json.load(f)
+        assert main["summary"] == legacy["summary"]
+        assert main["spec"] == legacy["spec"]
+
+
+# ------------------------------------------------ cohort-order parity
+def _record_cohorts(sim):
+    """Record (a) the flattened order every arrival is processed in and
+    (b) the multi-payload cohort partitions handed to the policy batch
+    hook. Singleton cohorts are equivalent to a direct ``_on_arrival``
+    call (the batch hook only fires for len > 1), and the fast loop
+    exploits that by dispatching lone retries directly — so only the
+    multi-payload partitions are pinned, plus the total order."""
+    orig_cohort = sim._process_arrival_cohort
+    orig_arrival = sim._on_arrival
+    order, cohorts = [], []
+
+    def cohort_wrapper(t, payloads):
+        if len(payloads) > 1:
+            cohorts.append(
+                (t, tuple(a.invocation_id for a, _, _, _ in payloads)))
+        orig_cohort(t, payloads)
+
+    def arrival_wrapper(arrival, first_seen, alloc=None, aux=None):
+        order.append((sim.now, arrival.invocation_id))
+        orig_arrival(arrival, first_seen, alloc, aux)
+
+    sim._process_arrival_cohort = cohort_wrapper
+    sim._on_arrival = arrival_wrapper
+    return order, cohorts
+
+
+def test_same_timestamp_cohorts_partition_identically():
+    """Fresh arrivals sharing a timestamp form one cohort; retries
+    landing on that timestamp extend it in seq order. Both loops must
+    process arrivals in the same total order and feed the policy the
+    same multi-payload (t, ids) partitions."""
+    profiles, pool, slo = _build_stack()
+    fn = "lrtrain"  # ~2.5 s at 8 vCPUs: serializes a 1-worker cluster
+    trace = [Arrival(0, 0.0, fn, 0),
+             Arrival(1, 1.0, fn, 0), Arrival(2, 1.0, fn, 0),
+             # collides with the t=1.5 retries of invocations 1 and 2
+             Arrival(3, 1.5, fn, 0),
+             Arrival(4, 9.0, fn, 0)]
+    orders, cohorts = {}, {}
+    for legacy in (False, True):
+        cfg = SimConfig(n_workers=1, vcpus_per_worker=8, physical_cores=8,
+                        mem_mb_per_worker=4096, vcpu_limit=8,
+                        retry_interval_s=0.5, queue_timeout_s=300.0,
+                        seed=0, legacy_event_loop=legacy)
+        pol = make_policy("static-large", profiles, pool, slo, seed=0)
+        sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                        slo_table=slo, cfg=cfg)
+        orders[legacy], cohorts[legacy] = _record_cohorts(sim)
+        sim.run(list(trace))
+    assert orders[False] == orders[True]
+    assert cohorts[False] == cohorts[True]
+    # the trace actually produced a mixed fresh+retry cohort at t=1.5
+    mixed = [ids for t, ids in cohorts[False] if t == 1.5]
+    assert mixed and set(mixed[0]) >= {1, 2, 3}
+    # fresh arrival 3 (virtual seq < any retry seq) leads its cohort
+    assert mixed[0][0] == 3
+
+
+# ------------------------------------------------- CalendarQueue units
+def test_calendar_queue_pop_parity_fuzz():
+    """Pop order matches a single global heapq over the same pushes,
+    with interleaved pops and pushes into already-draining buckets."""
+    rng = random.Random(7)
+    q = CalendarQueue(bucket_s=1.0)
+    ref = []
+    seq = 0
+    popped = []
+    expect = []
+    for _ in range(2000):
+        if ref and rng.random() < 0.45:
+            popped.append(q.pop())
+            expect.append(heapq.heappop(ref))
+        else:
+            ev = (rng.uniform(0.0, 50.0), seq, "k", None)
+            seq += 1
+            q.push(ev)
+            heapq.heappush(ref, ev)
+    while ref:
+        popped.append(q.pop())
+        expect.append(heapq.heappop(ref))
+    assert popped == expect
+    assert len(q) == 0 and not q
+
+
+def test_calendar_queue_insert_into_draining_bucket():
+    q = CalendarQueue(bucket_s=1.0)
+    q.push((0.1, 0, "a", None))
+    q.push((0.9, 1, "b", None))
+    assert q.pop()[2] == "a"  # bucket 0 is now the draining bucket
+    q.push((0.5, 2, "c", None))  # lands in the draining bucket
+    assert q.pop()[2] == "c"
+    assert q.pop()[2] == "b"
+
+
+def test_calendar_queue_push_earlier_than_cached_head():
+    """A push that OPENS a bucket earlier than the cached head must
+    invalidate the cache (regression test for the head-bucket cache)."""
+    q = CalendarQueue(bucket_s=1.0)
+    q.push((8.2, 0, "late", None))
+    assert q.peek()[2] == "late"  # caches bucket 8 as the head
+    q.push((5.5, 1, "early", None))
+    assert q.peek()[2] == "early"
+    assert q.pop()[2] == "early"
+    assert q.pop()[2] == "late"
+
+
+def test_calendar_queue_same_t_orders_by_seq_across_kinds():
+    q = CalendarQueue(bucket_s=1.0)
+    q.push((2.0, 7, "retry", None))
+    q.push((2.0, 5, "finish", None))
+    q.push((2.0, 6, "warm_start", None))
+    assert [q.pop()[2] for _ in range(3)] == ["finish", "warm_start", "retry"]
+
+
+def test_calendar_queue_empty_pop_raises():
+    q = CalendarQueue()
+    with pytest.raises(IndexError):
+        q.pop()
+    q.push((1.0, 0, "x", None))
+    q.pop()
+    with pytest.raises(IndexError):
+        q.pop()
+    assert q.peek() is None
