@@ -48,6 +48,7 @@ MODULES = [
     ("admission_bench", "benchmarks.admission_bench"),
     ("estimate_bench", "benchmarks.estimate_bench"),
     ("fleet_bench", "benchmarks.fleet_bench"),
+    ("registry_bench", "benchmarks.registry_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]

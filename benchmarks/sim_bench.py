@@ -31,7 +31,11 @@ Three A/Bs, each against a pre-fix path kept behind a config switch:
   learning-path throughput gate: the arena must be ≥3x events/sec AND
   bit-identical in summary metrics (enforced here, not just printed).
 
-Plus the ``scale`` tier (run_stack_ab + run_scale): a full-stack A/B —
+Plus the ``image_cache_on`` cell — the scans-A/B trace re-run with
+``SimConfig(image_cache=ImageCacheSpec())`` so the per-node layer
+cache's per-cold-start overhead has its own events/sec floor next to
+the ``incremental`` cell's (the cache-off default path) — and the
+``scale`` tier (run_stack_ab + run_scale): a full-stack A/B —
 array-backed event loop + indexed scans + agent arena vs
 ``legacy_event_loop`` + ``legacy_scans`` + the legacy engine, hard-
 failing on any summary-metric difference — and the azure-24h cell, one
@@ -47,6 +51,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.util import QUICK, emit
+from repro.core.image_cache import ImageCacheSpec
 from repro.serving import baselines as B
 from repro.serving.experiment import make_policy
 from repro.serving.profiles import build_input_pool, build_profiles
@@ -73,6 +78,31 @@ def _run_once(trace, profiles, pool, slo_table, *, legacy: bool,
     results = sim.run(trace)
     wall = time.perf_counter() - t0
     return sim.events_processed, wall, summarize(results)
+
+
+# ------------------------------------------------------- image-cache cell
+def run_cache_cell(trace, profiles, pool, slo_table) -> None:
+    """events/sec with the per-node image/layer cache ENABLED on the
+    same uncapped heavy-tail cell as the scans A/B (floor rides
+    benchmarks/baselines.json). The cache adds per-cold-start work —
+    a residual-pull rank across the walk plus the pull bookkeeping —
+    so this cell prices that overhead next to ``sim_bench.incremental``
+    (the identical run with ``image_cache=None``, the zero-overhead
+    default)."""
+    cfg = SimConfig(seed=0, vcpu_limit=100_000,
+                    mem_mb_per_worker=4_000_000,
+                    image_cache=ImageCacheSpec())
+    pol = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=cfg)
+    t0 = time.perf_counter()
+    results = sim.run(trace)
+    wall = time.perf_counter() - t0
+    ev = sim.events_processed
+    s = summarize(results)
+    emit("sim_bench.image_cache_on", wall / ev * 1e6,
+         f"n={len(trace)}|events={ev}|events_per_sec={ev / wall:.0f}"
+         f"|cold_start_pct={s['cold_start_pct']:.2f}")
 
 
 # --------------------------------------------------- allocator-engine A/B
@@ -306,6 +336,7 @@ def run() -> None:
     emit("sim_bench.speedup", 0.0,
          f"x{eps_fast / eps_legacy:.2f}|metrics_identical={sum_fast == sum_legacy}")
 
+    run_cache_cell(trace, profiles, pool, slo_table)
     run_engine_ab(trace, profiles, pool, slo_table)
     run_retry_ab(profiles, pool, slo_table)
     run_stack_ab(trace, profiles, pool, slo_table)

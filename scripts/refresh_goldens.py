@@ -27,6 +27,7 @@ from typing import Dict, Optional
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.golden import (  # noqa: E402
+    CACHE_DISABLED_SCENARIOS,
     ESTIMATE_ROUTING_SCENARIOS,
     GOLDEN_POLICY,
     LEGACY_ACQUIRE_SCENARIOS,
@@ -41,13 +42,15 @@ LEGACY_SUBDIR = "legacy-acquire"
 LEGACY_ENGINE_SUBDIR = "legacy-engine"
 LEGACY_EVENT_LOOP_SUBDIR = "legacy-event-loop"
 ESTIMATE_SUBDIR = "estimate-routing"
+CACHE_DISABLED_SUBDIR = "cache-disabled"
 
 
 def write_snapshot(scenario: str, out_dir: str, *,
                    legacy_acquire: bool = False,
                    legacy_engine: bool = False,
                    estimate_routing: bool = False,
-                   legacy_event_loop: bool = False) -> Dict:
+                   legacy_event_loop: bool = False,
+                   cache_disabled: bool = False) -> Dict:
     """Run one golden scenario and write its snapshot JSON; returns the
     written document (the schema tests/test_refresh_goldens.py pins)."""
     os.makedirs(out_dir, exist_ok=True)
@@ -58,7 +61,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
         "summary": run_golden(scenario, legacy_acquire=legacy_acquire,
                               legacy_engine=legacy_engine,
                               estimate_routing=estimate_routing,
-                              legacy_event_loop=legacy_event_loop),
+                              legacy_event_loop=legacy_event_loop,
+                              cache_disabled=cache_disabled),
     }
     path = os.path.join(out_dir, f"{scenario}.json")
     with open(path, "w") as f:
@@ -67,7 +71,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
     tag = (" (legacy-acquire)" if legacy_acquire
            else " (legacy-engine)" if legacy_engine
            else " (estimate-routing)" if estimate_routing
-           else " (legacy-event-loop)" if legacy_event_loop else "")
+           else " (legacy-event-loop)" if legacy_event_loop
+           else " (cache-disabled)" if cache_disabled else "")
     print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
           f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
     return doc
@@ -93,6 +98,10 @@ def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
             write_snapshot(
                 scenario, os.path.join(out_dir, ESTIMATE_SUBDIR),
                 estimate_routing=True)
+        if scenario in CACHE_DISABLED_SCENARIOS:
+            write_snapshot(
+                scenario, os.path.join(out_dir, CACHE_DISABLED_SUBDIR),
+                cache_disabled=True)
 
 
 def main(argv=None) -> None:

@@ -146,6 +146,11 @@ class Worker:
     by_function: Dict[str, Dict[int, Container]] = dataclasses.field(
         default_factory=dict
     )
+    # per-node image/layer store (repro.core.image_cache.NodeImageCache);
+    # attached by the simulator when SimConfig(image_cache=...) is set,
+    # None in the flat-constant cold-start world
+    image_cache: Optional[object] = dataclasses.field(
+        default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.soa is None:
@@ -417,6 +422,11 @@ class Cluster:
         return c
 
     def remove_container(self, c: Container) -> None:
+        ic = c.worker.image_cache
+        if ic is not None:
+            # reaping the container drops its reference to the image's
+            # layers; they stay resident but become LRU-evictable
+            ic.release(c.function)
         c.worker.containers.pop(c.cid, None)
         byf = c.worker.by_function.get(c.function)
         if byf is not None:

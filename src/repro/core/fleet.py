@@ -45,6 +45,8 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
+from repro.core.image_cache import ImageSpec
+
 #: §7.1 testbed node — the reference machine every exec_factor is
 #: relative to, and the defaults SimConfig mirrors.
 REF_PHYSICAL_CORES = 96
@@ -53,6 +55,17 @@ REF_MEM_MB = 125 * 1024
 REF_NIC_GBPS = 10.0
 REF_COLD_BASE_S = 0.45
 REF_COLD_PER_GB_S = 0.12
+#: per-node container-image layer store and registry downlink (only
+#: consulted when ``SimConfig(image_cache=...)`` is enabled)
+REF_IMAGE_STORE_MB = 20.0 * 1024
+REF_REGISTRY_GBPS = 10.0
+
+#: Lognormal jitter the simulator multiplies into every cold-start
+#: draw, and its expectation E[lognormal(0, s)] = exp(s^2/2) — the
+#: factor the router prices so the estimator matches the runtime's
+#: mean, not its median (tests/test_image_cache.py pins the two).
+COLD_JITTER_SIGMA = 0.15
+COLD_JITTER_MEAN = math.exp(0.5 * COLD_JITTER_SIGMA ** 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +94,11 @@ class MachineType:
     vcpu_limit: Optional[int] = None
     preemptible: bool = False
     price_per_hour: float = 1.0
+    # container-image layer store size and registry downlink; inert
+    # unless SimConfig(image_cache=...) is set (flat-constant cold
+    # starts otherwise)
+    image_store_mb: float = REF_IMAGE_STORE_MB
+    registry_gbps: float = REF_REGISTRY_GBPS
 
     @property
     def limit(self) -> int:
@@ -175,6 +193,11 @@ class FleetSpec:
 
     clusters: Tuple[ClusterSpec, ...]
     topology: Topology = Topology()
+    # optional function -> ImageSpec assignments carried with the
+    # deployment (tuple of (function, ImageSpec) pairs, hashable);
+    # consulted only when SimConfig(image_cache=...) is enabled and the
+    # ImageCacheSpec doesn't override them
+    images: Tuple[Tuple[str, ImageSpec], ...] = ()
 
     @property
     def n_clusters(self) -> int:

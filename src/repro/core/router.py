@@ -92,7 +92,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster, Worker
-from repro.core.fleet import Topology
+from repro.core.fleet import COLD_JITTER_MEAN, Topology
 from repro.core.ect import (
     ECT_BLIND_SHED_BAND,
     ECT_ERR_WIDEN,
@@ -141,6 +141,8 @@ class Router:
         pool_key: Optional[Callable[[str], str]] = None,
         network_fed: Optional[Callable[[str], bool]] = None,
         estimate_features: bool = True,
+        image_resolver=None,  # function -> ImageSpec; prices each cold
+        # candidate's residual registry pull (None = flat cold curve)
     ):
         assert routing in ROUTING_POLICIES, routing
         assert admission in ADMISSION_POLICIES, admission
@@ -177,6 +179,7 @@ class Router:
             and not topology.is_free()
         )
         self.network_fed = network_fed
+        self.image_resolver = image_resolver
         # calibration pool key: estimator state (EWMAs, observation
         # counts, the per-input regressor) is keyed by pool_key(fn) —
         # the simulator passes base_function, so clone aliases (fn::k)
@@ -443,10 +446,20 @@ class Router:
         cold_est = None
         if w is not None:
             # cold starts create an exact-size container, at the target
-            # machine's own cold-start curve (mean-field — the
-            # simulator's curve without its lognormal jitter)
+            # machine's own cold-start curve scaled by the EXPECTATION
+            # of the simulator's lognormal jitter (COLD_JITTER_MEAN), so
+            # the estimator prices the runtime's mean draw rather than
+            # its median
             slow = self._slowdown(w, function, alloc.vcpus)
-            cold_est = (max(w.machine.cold_latency_s(alloc.mem_mb), xfer)
+            cold_lat = (w.machine.cold_latency_s(alloc.mem_mb)
+                        * COLD_JITTER_MEAN)
+            if self.image_resolver is not None and w.image_cache is not None:
+                # pull-what's-missing: the registry fetch overlaps the
+                # container-create cost, so this candidate's cold price
+                # is whichever of the two dominates
+                cold_lat = max(cold_lat, w.image_cache.residual_pull_s(
+                    self.image_resolver(function)))
+            cold_est = (max(cold_lat, xfer)
                         + self.sched_overhead_s
                         + slow * (exec_est * w.machine.exec_factor))
         if warming_est is not None and (cold_est is None

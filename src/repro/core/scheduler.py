@@ -61,6 +61,8 @@ class ShabariScheduler:
         keep_alive_s: float = 600.0,  # OpenWhisk default keep-alive
         route_larger: bool = True,  # Shabari case (2); off = OpenWhisk mode
         background_launch: bool = True,  # Shabari's proactive exact-size spawn
+        image_resolver=None,  # function -> ImageSpec; enables the
+        # cache-affinity cold rank (None = plain walk, the default)
     ):
         assert placement in ("hashing", "packing")
         self.cluster = cluster
@@ -68,6 +70,7 @@ class ShabariScheduler:
         self.keep_alive_s = keep_alive_s
         self.route_larger = route_larger
         self.background_launch = background_launch
+        self.image_resolver = image_resolver
         # md5 home hashing is deterministic per function name; memoize
         # it (and the rotated walk order per home slot — the worker list
         # is fixed for the cluster's lifetime) so the per-placement cost
@@ -106,6 +109,10 @@ class ShabariScheduler:
         # seeds the function's warm pool for its whole keep-alive, and
         # pools on reclaimable machines are the ones that vanish.
         # Identical to the plain walk on all-reliable fleets.
+        resolver = self.image_resolver
+        if resolver is not None:
+            return self._pick_cold_affinity(resolver(function), vcpus,
+                                            mem_mb, order)
         fallback: Optional[Worker] = None
         for w in order:
             if not w.fits(vcpus, mem_mb):
@@ -115,6 +122,44 @@ class ShabariScheduler:
             if fallback is None:
                 fallback = w
         return fallback
+
+    # a cold placement seeds the function's warm pool on that node for
+    # its whole keep-alive; above this post-placement utilization the
+    # node is too contended for that pool to be USABLE (warm routing
+    # re-checks fits() at request time), so locality there is worthless
+    CROWD_FRAC = 0.75
+
+    def _pick_cold_affinity(self, image, vcpus: int, mem_mb: int,
+                            order: List[Worker]) -> Optional[Worker]:
+        """Cache-affinity cold rank: among fitting workers, minimize the
+        residual registry pull (seconds of missing layers), breaking
+        ties by walk order — so a free registry (zero pull everywhere)
+        degenerates to the plain walk exactly. A worker already past
+        CROWD_FRAC utilization is priced as if cache-cold (residual +
+        full pull): a warm pool stranded on a saturated node fails the
+        fits() check at request time, forfeiting the locality benefit,
+        so crowded nodes only win when nothing else is cheaper. Reliable
+        workers still dominate the preemptible fallback tier."""
+        frac = self.CROWD_FRAC
+        best: Optional[Worker] = None
+        best_key = None
+        fallback: Optional[Worker] = None
+        fb_key = None
+        for i, w in enumerate(order):
+            if not w.fits(vcpus, mem_mb):
+                continue
+            ic = w.image_cache
+            pull = ic.residual_pull_s(image)
+            if (w.used_vcpus + vcpus > frac * w.vcpu_limit
+                    or w.used_mem_mb + mem_mb > frac * w.total_mem_mb):
+                pull += ic.full_pull_s(image)
+            key = (pull, i)
+            if not w.machine.preemptible:
+                if best_key is None or key < best_key:
+                    best, best_key = w, key
+            elif best is None and (fb_key is None or key < fb_key):
+                fallback, fb_key = w, key
+        return best if best is not None else fallback
 
     def cold_candidate(self, function: str, vcpus: int,
                        mem_mb: int) -> Optional[Worker]:

@@ -210,7 +210,8 @@ def run_scenario(
     pool = build_input_pool(seed=0)  # input pool fixed across policies
     slo_table = B.build_slo_table(profiles, pool, multiplier=slo_multiplier)
 
-    default_clones = 6 if spec.scenario == "cold-storm" else 1
+    default_clones = 6 if spec.scenario in ("cold-storm",
+                                            "registry-storm") else 1
     clones = int(spec.param("clones", default_clones))
     profiles, pool, slo_table = expand_function_clones(
         profiles, pool, slo_table, clones

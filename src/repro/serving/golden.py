@@ -20,6 +20,7 @@ import dataclasses
 from typing import Dict
 
 from repro.core.fleet import ClusterSpec, FleetSpec, Link, MachineType, Topology
+from repro.core.image_cache import ImageCacheSpec
 from repro.serving.experiment import run_scenario
 from repro.serving.simulator import SimConfig
 from repro.serving.workload import ScenarioSpec, list_scenarios
@@ -63,6 +64,15 @@ LEGACY_EVENT_LOOP_SCENARIOS = ("oversubscribe",)
 # (tests/test_router.py asserts the pin).
 ESTIMATE_ROUTING_SCENARIOS = ("multi-cluster",)
 
+# The image-cache A/B: registry-storm's MAIN golden runs with
+# SimConfig(image_cache=ImageCacheSpec()) — pull-what's-missing cold
+# starts plus cache-affinity placement — and is ALSO snapshotted under
+# tests/goldens/cache-disabled/ with image_cache=None, pinning the
+# flat-constant cold model on the same trace. This IS a semantics fork
+# (cold latencies differ), so the two snapshots are independently
+# regression-tested (tests/test_image_cache.py).
+CACHE_DISABLED_SCENARIOS = ("registry-storm",)
+
 
 # Heterogeneous-fleet goldens (repro.core.fleet). Both fleets keep the
 # main goldens' 4-worker footprint (2 clusters x 2 workers of 32-vCPU/
@@ -92,6 +102,16 @@ _GOLDEN_WAN_FLEET = FleetSpec(
     ),
     topology=Topology(default_link=Link(gbps=1.0, latency_s=0.05)),
 )
+# registry-storm fleet: same 4-worker/32-vCPU footprint, but each node
+# keeps only a 4 GB layer store behind a 2 Gb registry downlink — small
+# enough that the clone catalog churns the LRU and slow enough that a
+# full pull dwarfs the classic cold curve, so cache-affinity placement
+# has real physics to exploit
+_GOLDEN_REGISTRY = MachineType(
+    name="fast-32c-reg2g", physical_cores=32, vcpus=32, mem_mb=16 * 1024,
+    image_store_mb=4 * 1024, registry_gbps=2.0)
+_GOLDEN_REGISTRY_FLEET = FleetSpec(
+    clusters=(ClusterSpec(machines=((_GOLDEN_REGISTRY, 4),)),))
 
 # per-scenario SimConfig overrides: multi-cluster splits the same
 # 4-worker footprint into 2 clusters x 2 workers behind the spill-over
@@ -102,6 +122,11 @@ _GOLDEN_SIM_OVERRIDES: Dict[str, Dict] = {
     "multi-cluster": {"n_clusters": 2, "n_workers": 2},
     "hetero-fleet": {"fleet": _GOLDEN_HETERO_FLEET},
     "wan-spill": {"fleet": _GOLDEN_WAN_FLEET, "routing": "estimate"},
+    # registry-storm pins the image-cache subsystem: finite per-node
+    # layer stores (small enough to churn on the clone catalog) over a
+    # slow registry downlink, with cache-affinity placement on
+    "registry-storm": {"image_cache": ImageCacheSpec(),
+                       "fleet": _GOLDEN_REGISTRY_FLEET},
 }
 
 
@@ -130,6 +155,7 @@ def golden_sim_config(scenario: str = "") -> SimConfig:
 _GOLDEN_PARAMS = {
     "flash-crowd": {"spike_mult": 5.0},
     "oversubscribe": {"load_mult": 2.0},
+    "registry-storm": {"spike_mult": 3.0},
 }
 
 
@@ -146,7 +172,8 @@ def golden_specs() -> Dict[str, ScenarioSpec]:
 def run_golden(scenario: str, *, legacy_acquire: bool = False,
                legacy_engine: bool = False,
                estimate_routing: bool = False,
-               legacy_event_loop: bool = False) -> Dict[str, float]:
+               legacy_event_loop: bool = False,
+               cache_disabled: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     cfg = golden_sim_config(scenario)
     if legacy_acquire:
@@ -155,5 +182,7 @@ def run_golden(scenario: str, *, legacy_acquire: bool = False,
         cfg = dataclasses.replace(cfg, routing="estimate")
     if legacy_event_loop:
         cfg = dataclasses.replace(cfg, legacy_event_loop=True)
+    if cache_disabled:
+        cfg = dataclasses.replace(cfg, image_cache=None)
     policy = "shabari-legacy-engine" if legacy_engine else GOLDEN_POLICY
     return run_scenario(policy, spec, sim_cfg=cfg).summary

@@ -63,7 +63,9 @@ from repro.core.cluster import Cluster, Container, Worker
 from repro.core.cost_functions import Observation
 from repro.core.daemon import (SAMPLE_INTERVAL_S, UtilizationTrace,
                                WorkerDaemon, synth_trace)
-from repro.core.fleet import FleetSpec, MachineType
+from repro.core.fleet import COLD_JITTER_SIGMA, FleetSpec, MachineType
+from repro.core.image_cache import (ImageCacheSpec, NodeImageCache,
+                                    default_images)
 from repro.core.metadata_store import InvocationRecord, MetadataStore
 from repro.serving.event_queue import CalendarQueue
 from repro.serving.profiles import FunctionProfile, base_function, input_size_mb
@@ -202,6 +204,19 @@ class SimConfig:
     # (benchmarks/fleet_bench gates the gap). No effect on what the
     # simulator charges.
     estimate_transfer: bool = True
+    # Locality-aware cold starts (repro.core.image_cache): an
+    # ImageCacheSpec attaches a finite per-node layer store to every
+    # worker and cold latency becomes pull-what's-missing — the
+    # registry fetch of the image's non-resident layers (over the
+    # machine's registry_gbps downlink) overlapped with the classic
+    # cold curve. ImageCacheSpec(affinity=True) additionally ranks
+    # cold placement by residual pull and prices it in estimate
+    # routing; affinity=False keeps decisions cache-blind (the A/B
+    # arm, benchmarks/registry_bench). The None default is the flat
+    # -constant cold model with a zero-overhead fast path: no cache
+    # objects, no per-arrival lookups, rng stream untouched — every
+    # pre-existing golden is byte-identical.
+    image_cache: Optional[ImageCacheSpec] = None
 
 
 @dataclasses.dataclass(slots=True)
@@ -361,6 +376,37 @@ class Simulator:
         from repro.core.router import Router
         from repro.core.scheduler import ShabariScheduler
 
+        # locality-aware cold starts: resolve the image catalog and
+        # attach one NodeImageCache per worker. The None default does
+        # NOTHING here — one boolean, no cache objects, no per-arrival
+        # work — so the disabled path stays byte-identical (goldens)
+        # and full-speed (sim_bench scale tier).
+        ic = self.cfg.image_cache
+        self._image_cache_active = ic is not None
+        self._images = None
+        image_resolver = None
+        if self._image_cache_active:
+            if ic.images is not None:
+                self._images = dict(ic.images)
+            elif self.fleet.images:
+                self._images = dict(self.fleet.images)
+            else:
+                self._images = default_images(sorted(self.profiles))
+            pinned: Tuple[str, ...] = ()
+            if ic.pin_base and self._images:
+                # pin the universal base: layers present in EVERY image
+                digsets = [set(im.digests) for im in self._images.values()]
+                pinned = tuple(sorted(set.intersection(*digsets)))
+            for cl in self.clusters:
+                for w in cl.workers:
+                    w.image_cache = NodeImageCache(
+                        w.machine.image_store_mb,
+                        w.machine.registry_gbps, pinned=pinned)
+            if ic.affinity:
+                # scheduler ranks cold placement by residual pull and
+                # the router prices it; affinity=False leaves both
+                # cache-blind while the runtime still charges pulls
+                image_resolver = self._images.__getitem__
         placement = getattr(policy, "placement", "hashing")
         shabari_sched = getattr(policy, "uses_shabari_scheduler", True)
         self.schedulers = [
@@ -368,6 +414,7 @@ class Simulator:
                 cl, placement=placement,
                 keep_alive_s=self.cfg.keep_alive_s,
                 route_larger=shabari_sched, background_launch=shabari_sched,
+                image_resolver=image_resolver,
             )
             for cl in self.clusters
         ]
@@ -389,6 +436,7 @@ class Simulator:
             # one model instead of each relearning from scratch
             pool_key=base_function,
             network_fed=lambda fn: base_function(fn) in NETWORK_FED,
+            image_resolver=image_resolver,
         )
         # single-cluster aliases (the common case, and what most tests
         # and benchmarks reach for)
@@ -445,8 +493,21 @@ class Simulator:
         """Container-create latency on ``machine`` (the target worker's
         hardware; default-fleet machines mirror the SimConfig curve)."""
         m = machine if machine is not None else self.fleet.clusters[0].machines[0][0]
-        jitter = float(self.rng.lognormal(0.0, 0.15))
+        jitter = float(self.rng.lognormal(0.0, COLD_JITTER_SIGMA))
         return m.cold_latency_s(mem_mb) * jitter
+
+    def _cold_latency_at(self, w: Worker, function: str,
+                         vcpus: int, mem_mb: int) -> float:
+        """Cold latency for creating ``function``'s container on worker
+        ``w``: the classic jittered create cost, overlapped with the
+        registry pull of whatever image layers ``w`` is missing (the
+        pull mutates the node's cache — this is the charging path, not
+        a probe). With ``image_cache=None`` this is exactly the classic
+        draw: same rng stream, no cache work."""
+        lat = self.cold_latency(vcpus, mem_mb, w.machine)
+        if self._image_cache_active:
+            lat = max(lat, w.image_cache.pull(self._images[function]))
+        return lat
 
     def _contention(self, w: Worker, fn: str, extra_demand: float,
                     extra_net: float) -> float:
@@ -607,7 +668,7 @@ class Simulator:
             w, v, m = decision.background_launch
             c = cluster.new_container(
                 w, arrival.function, v, m, now,
-                warm_at=now + self.cold_latency(v, m, w.machine),
+                warm_at=now + self._cold_latency_at(w, arrival.function, v, m),
             )
             self._note_size(arrival.function, v, m)
 
@@ -628,7 +689,7 @@ class Simulator:
             # payload transfer overlaps the warm-up; only the excess
             # beyond the cold latency delays the start)
             w, v, m = decision.background_launch
-            lat = self.cold_latency(v, m, w.machine)
+            lat = self._cold_latency_at(w, arrival.function, v, m)
             c = cluster.new_container(w, arrival.function, v, m, now,
                                       warm_at=now + lat)
             cluster.mark_busy(c)

@@ -346,6 +346,31 @@ def _cold_storm(spec: ScenarioSpec, functions, inputs_per_function, rng):
     return _assemble(times, functions, pop, inputs_per_function, rng)
 
 
+@register_scenario("registry-storm")
+def _registry_storm(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Cold-storm over clone aliases that SHARE image base layers (a
+    rolling deploy hammering the registry): uniform popularity over the
+    cloned function set — every arrival is likely cold — plus a deploy
+    -wave window at ``spike_mult`` x baseline, so concurrent pulls pile
+    onto the per-node layer stores. The interesting physics lives in
+    ``SimConfig(image_cache=...)``: siblings of a pulled clone miss only
+    their tiny alias layer, so WHERE a cold start lands decides whether
+    it pulls megabytes or gigabytes. params: clones (consumed by the
+    experiment layer, default 6), spike_mult (default 4), spike_start
+    _frac (default 0.3), spike_duration_s (default 45)."""
+    mult = spec.param("spike_mult", 4.0)
+    t0 = spec.param("spike_start_frac", 0.3) * spec.duration_s
+    t1 = min(t0 + spec.param("spike_duration_s", 45.0), spec.duration_s)
+    pop = np.full(len(functions), 1.0 / len(functions))
+
+    def rate(t: np.ndarray) -> np.ndarray:
+        return np.where((t >= t0) & (t < t1), spec.rps * mult, spec.rps)
+
+    peak = spec.rps * max(mult, 1.0)
+    times = _thinned_times(rate, peak, spec.duration_s, rng)
+    return _assemble(times, functions, pop, inputs_per_function, rng)
+
+
 @register_scenario("oversubscribe")
 def _oversubscribe(spec: ScenarioSpec, functions, inputs_per_function, rng):
     """Offered load beyond cluster vCPUs (the §7.5 study): steady

@@ -22,6 +22,7 @@ import pytest
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster
 from repro.core.fleet import (
+    COLD_JITTER_MEAN,
     ClusterSpec,
     FleetSpec,
     Link,
@@ -333,8 +334,10 @@ def test_estimate_prices_transfer_on_remote_spill():
     est_blind, _, _ = rb._estimate(1 - home, "f", ALLOC, 0.0,
                                    input_mb=1000.0)
     # 1000 MB over 1 Gbps = 8 s; cold start ~0.5 s overlaps inside it
+    # (the cold term prices the jitter expectation, not the median)
     assert est - est_blind == pytest.approx(
-        8.0 - clusters[0].workers[0].machine.cold_latency_s(ALLOC.mem_mb))
+        8.0 - clusters[0].workers[0].machine.cold_latency_s(ALLOC.mem_mb)
+        * COLD_JITTER_MEAN)
     assert est > est_blind + 7.0
 
 
@@ -370,7 +373,8 @@ def test_estimate_prices_exec_factor_and_cold_curve():
     # fast: 0.45 + 0.12*0.5 cold + 2 s exec; slow: 1.5 + 0.18*... + 6 s
     assert est_slow - est_fast == pytest.approx(
         (slow.cold_latency_s(ALLOC.mem_mb)
-         - fast.cold_latency_s(ALLOC.mem_mb)) + (3.0 - 1.0) * 2.0)
+         - fast.cold_latency_s(ALLOC.mem_mb)) * COLD_JITTER_MEAN
+        + (3.0 - 1.0) * 2.0)
     rd = r.route("f", ALLOC, 0.0)
     assert rd.cluster_idx == 0
 

@@ -1,0 +1,360 @@
+"""Locality-aware cold starts (repro.core.image_cache).
+
+Four layers of coverage:
+
+* NodeImageCache units — LRU eviction order, pinned and in-use layers
+  exempt, hit/miss/evict counters, registry pull pricing;
+* the catalog contract — clone aliases (fn::k) share every layer of
+  their base function's image except the tiny per-alias config layer,
+  so one alias's pull warms its siblings;
+* scheduler/router integration — cache-affinity cold placement prefers
+  the worker with the smallest residual pull (degenerating to the plain
+  walk on a free registry), the runtime pulls ONLY on container
+  creation (the warm path never touches the registry), and the
+  cache-disabled A/B snapshot under tests/goldens/cache-disabled/ pins
+  the flat-constant cold model on the registry-storm trace;
+* the estimator/runtime jitter contract — the router prices the cold
+  curve times E[lognormal jitter] (COLD_JITTER_MEAN), and the
+  simulator's draws average to exactly that, so the two can't silently
+  diverge.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.fleet import (
+    COLD_JITTER_MEAN,
+    COLD_JITTER_SIGMA,
+    ClusterSpec,
+    FleetSpec,
+    MachineType,
+)
+from repro.core.image_cache import (
+    ALIAS_LAYER_MB,
+    BASE_LAYERS,
+    ImageCacheSpec,
+    ImageSpec,
+    NodeImageCache,
+    default_images,
+)
+from repro.core.scheduler import ShabariScheduler
+from repro.serving import baselines as B
+from repro.serving.experiment import make_policy, run_scenario
+from repro.serving.golden import (
+    ATOL,
+    CACHE_DISABLED_SCENARIOS,
+    RTOL,
+    run_golden,
+)
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.workload import Arrival, ScenarioSpec
+
+ALLOC = Allocation(vcpus=4, mem_mb=2048)
+
+
+def _img(name, *layers):
+    return ImageSpec(name=name, layers=tuple(layers))
+
+
+# ------------------------------------------------------ cache units
+def test_pull_charges_only_missing_bytes():
+    cache = NodeImageCache(store_mb=10_000, registry_gbps=1.0)
+    a = _img("a", ("base", 500.0), ("app-a", 250.0))
+    b = _img("b", ("base", 500.0), ("app-b", 125.0))
+    # 750 MB over 1 Gbps = 6 s
+    assert cache.pull(a) == pytest.approx(750.0 * 0.008)
+    # base already resident: b pays only its 125 MB app layer
+    assert cache.missing_mb(b) == pytest.approx(125.0)
+    assert cache.pull(b) == pytest.approx(125.0 * 0.008)
+    # full hit: free
+    assert cache.pull(a) == 0.0
+    assert cache.hits == 3 and cache.misses == 3
+    assert cache.used_mb == pytest.approx(875.0)
+
+
+def test_lru_evicts_oldest_idle_layer_first():
+    cache = NodeImageCache(store_mb=1000, registry_gbps=10.0)
+    a = _img("a", ("la", 400.0))
+    b = _img("b", ("lb", 400.0))
+    c = _img("c", ("lc", 400.0))
+    cache.pull(a)
+    cache.pull(b)
+    cache.release("a")
+    cache.release("b")
+    cache.pull(a)  # refresh a's recency, then idle it again
+    cache.release("a")
+    cache.pull(c)  # needs 400 MB; store holds 800/1000 -> evict LRU = lb
+    assert not cache.resident("lb")
+    assert cache.resident("la") and cache.resident("lc")
+    assert cache.evictions == 1
+
+
+def test_pinned_and_in_use_layers_are_eviction_exempt():
+    cache = NodeImageCache(store_mb=1000, registry_gbps=10.0,
+                           pinned=("pin",))
+    cache.pull(_img("p", ("pin", 300.0)))
+    cache.release("p")  # idle AND oldest, but pinned
+    busy = _img("busy", ("lb", 300.0))
+    cache.pull(busy)  # stays referenced: in-use
+    cache.pull(_img("idle", ("li", 300.0)))
+    cache.release("idle")
+    # 900/1000 used; a 300 MB pull must skip pinned + in-use and evict
+    # the idle unpinned layer only
+    cache.pull(_img("new", ("ln", 300.0)))
+    assert cache.resident("pin") and cache.resident("lb")
+    assert not cache.resident("li")
+    assert cache.evictions == 1
+
+
+def test_overflow_when_nothing_evictable():
+    cache = NodeImageCache(store_mb=500, registry_gbps=10.0)
+    cache.pull(_img("a", ("la", 400.0)))  # in-use, never released
+    cache.pull(_img("b", ("lb", 400.0)))  # cannot fit, cannot evict
+    # the pull proceeds anyway (a fetch in flight can't be refused) and
+    # the store overflows until references drop
+    assert cache.resident("la") and cache.resident("lb")
+    assert cache.used_mb == pytest.approx(800.0)
+    assert cache.evictions == 0
+
+
+def test_release_makes_layers_evictable_per_refcount():
+    cache = NodeImageCache(store_mb=500, registry_gbps=10.0)
+    a = _img("a", ("la", 400.0))
+    cache.pull(a)
+    cache.pull(a)  # two containers share the layers
+    cache.release("a")
+    cache.pull(_img("b", ("lb", 400.0)))  # la still referenced once
+    assert cache.resident("la")
+    cache.release("a")
+    cache.release("b")
+    cache.pull(_img("c", ("lc", 400.0)))
+    assert not cache.resident("la")  # now idle -> LRU victim
+
+
+def test_free_registry_prices_zero():
+    cache = NodeImageCache(store_mb=1000, registry_gbps=float("inf"))
+    a = _img("a", ("la", 400.0))
+    assert cache.residual_pull_s(a) == 0.0
+    assert cache.pull(a) == 0.0
+
+
+# ------------------------------------------------- catalog contract
+def test_clone_aliases_share_base_layers():
+    cat = default_images(["fn", "fn::1", "fn::2", "other"])
+    base = set(cat["fn"].digests)
+    alias = set(cat["fn::1"].digests)
+    # the alias stacks exactly one extra (tiny) layer on its base image
+    assert base < alias and len(alias - base) == 1
+    # distinct base functions share ONLY the universal OS/runtime base
+    assert set(cat["fn"].digests) & set(cat["other"].digests) == {
+        d for d, _ in BASE_LAYERS}
+
+
+def test_alias_pull_warms_siblings():
+    cat = default_images(["fn::0", "fn::1"])
+    cache = NodeImageCache(store_mb=100_000, registry_gbps=1.0)
+    cache.pull(cat["fn::0"])
+    # the sibling misses only its own 2 MB alias layer
+    assert cache.missing_mb(cat["fn::1"]) == pytest.approx(ALIAS_LAYER_MB)
+    assert cache.residual_pull_s(cat["fn::1"]) == pytest.approx(
+        ALIAS_LAYER_MB * 0.008)
+
+
+# ------------------------------------------- scheduler cache-affinity
+def _affinity_cluster(registry_gbps=2.0):
+    machine = MachineType(physical_cores=32, vcpus=32, mem_mb=16 * 1024,
+                          registry_gbps=registry_gbps)
+    cluster = Cluster(n_workers=2, vcpus_per_worker=32,
+                      mem_mb_per_worker=16 * 1024, vcpu_limit=32,
+                      machines=(machine, machine))
+    cat = default_images(["f"])
+    for w in cluster.workers:
+        w.image_cache = NodeImageCache(100_000, registry_gbps)
+    sched = ShabariScheduler(cluster, image_resolver=cat.__getitem__)
+    return cluster, sched, cat
+
+
+def test_affinity_prefers_layer_resident_worker():
+    cluster, sched, cat = _affinity_cluster()
+    home = sched._home_worker("f")
+    other = cluster.workers[1 - home]
+    other.image_cache.pull(cat["f"])
+    # walk order would pick the home worker; affinity overrides it
+    # because the other worker already holds every layer
+    assert sched._pick_cold_worker("f", 4, 2048) is other
+
+
+def test_affinity_crowded_resident_worker_priced_as_cold():
+    cluster, sched, cat = _affinity_cluster()
+    home = sched._home_worker("f")
+    other = cluster.workers[1 - home]
+    other.image_cache.pull(cat["f"])
+    # saturate the resident worker past CROWD_FRAC: its stranded warm
+    # pool would be unusable, so the rank must fall back to the walk
+    # choice even though every layer sits on `other`
+    other.acquire(28, 4096)
+    assert sched._pick_cold_worker("f", 4, 2048) is cluster.workers[home]
+    # below the crowding threshold locality wins again
+    other.release(28, 4096)
+    assert sched._pick_cold_worker("f", 4, 2048) is other
+
+
+def test_affinity_free_registry_degenerates_to_walk_order():
+    cluster, sched, cat = _affinity_cluster(registry_gbps=float("inf"))
+    home = sched._home_worker("f")
+    other = cluster.workers[1 - home]
+    other.image_cache.pull(cat["f"])
+    # zero pull cost everywhere -> pure walk order, exactly the plain
+    # (cache-blind) pick
+    assert sched._pick_cold_worker("f", 4, 2048) is cluster.workers[home]
+
+
+# ------------------------------------------------ simulator integration
+def _cache_cfg(**kw):
+    return SimConfig(
+        n_workers=4, vcpus_per_worker=32, physical_cores=32,
+        mem_mb_per_worker=16 * 1024, vcpu_limit=32, seed=0,
+        image_cache=ImageCacheSpec(), **kw)
+
+
+def _run_registry_storm(cfg, duration_s=40.0):
+    spec = ScenarioSpec(scenario="registry-storm", rps=2.0,
+                        duration_s=duration_s, seed=1)
+    return run_scenario("shabari", spec, sim_cfg=cfg, keep_results=True)
+
+
+def test_disabled_path_attaches_nothing():
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo = B.build_slo_table(profiles, pool)
+    policy = make_policy("shabari", profiles, pool, slo, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo, cfg=SimConfig(n_workers=2))
+    assert not sim._image_cache_active and sim._images is None
+    for w in sim.cluster.workers:
+        assert w.image_cache is None
+    assert sim.scheduler.image_resolver is None
+    assert sim.router.image_resolver is None
+
+
+def test_warm_path_never_pulls(monkeypatch):
+    """The registry is touched exactly once per container CREATION —
+    warm hits, retries, and queue waits never pull."""
+    pulls = []
+    creations = []
+    real_pull = NodeImageCache.pull
+    real_new = Cluster.new_container
+
+    def spy_pull(self, image):
+        pulls.append(image.name)
+        return real_pull(self, image)
+
+    def spy_new(self, *a, **kw):
+        c = real_new(self, *a, **kw)
+        creations.append(c.function)
+        return c
+
+    monkeypatch.setattr(NodeImageCache, "pull", spy_pull)
+    monkeypatch.setattr(Cluster, "new_container", spy_new)
+    out = _run_registry_storm(_cache_cfg())
+    warm_hits = sum(1 for r in out.results
+                    if not r.cold_start and not r.shed and not r.timed_out)
+    assert warm_hits > 0  # the trace actually exercised the warm path
+    assert len(pulls) == len(creations) > 0
+    assert pulls == creations  # one pull per creation, in order
+
+
+def test_cold_latency_includes_residual_pull():
+    """With a punishingly slow registry, observed cold latencies exceed
+    the classic jittered curve — the pull dominates the overlap."""
+    machine = MachineType(physical_cores=32, vcpus=32, mem_mb=16 * 1024,
+                          registry_gbps=0.25)
+    fleet = FleetSpec(clusters=(ClusterSpec(machines=((machine, 4),)),))
+    out = _run_registry_storm(_cache_cfg(fleet=fleet))
+    colds = [r for r in out.results if r.cold_start]
+    assert colds
+    # classic curve ceiling: cold_base + per_gb * 16 GB, jitter < 2x
+    ceiling = 2.0 * (0.45 + 0.12 * 16.0)
+    assert max(c.cold_latency_s for c in colds) > ceiling
+
+
+def test_cache_disabled_snapshot_pinned():
+    """The flat-constant A/B arm stays independently regression-pinned
+    under tests/goldens/cache-disabled/ (regenerated alongside the main
+    goldens by refresh_goldens.py)."""
+    for scenario in CACHE_DISABLED_SCENARIOS:
+        path = os.path.join(os.path.dirname(__file__), "goldens",
+                            "cache-disabled", f"{scenario}.json")
+        assert os.path.exists(path), (
+            f"missing cache-disabled snapshot {path}; run "
+            "PYTHONPATH=src python scripts/refresh_goldens.py")
+        with open(path) as f:
+            want = json.load(f)["summary"]
+        got = run_golden(scenario, cache_disabled=True)
+        assert set(got) == set(want)
+        for k, v in want.items():
+            assert got[k] == pytest.approx(v, rel=RTOL, abs=ATOL), (
+                f"{scenario}[cache-disabled] {k}: {got[k]} != {v}")
+
+
+# ------------------------------------- estimator/runtime jitter pin
+def test_cold_jitter_mean_is_lognormal_expectation():
+    assert COLD_JITTER_MEAN == pytest.approx(
+        math.exp(0.5 * COLD_JITTER_SIGMA ** 2))
+
+
+def test_simulator_draws_average_to_priced_expectation():
+    """The runtime's jittered cold_latency draws converge on the value
+    the router prices (cold curve x COLD_JITTER_MEAN) — the two sides
+    of the satellite-2 contract."""
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo = B.build_slo_table(profiles, pool)
+    policy = make_policy("shabari", profiles, pool, slo, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo, cfg=SimConfig(n_workers=1, seed=3))
+    m = sim.cluster.workers[0].machine
+    draws = np.array([sim.cold_latency(ALLOC.vcpus, ALLOC.mem_mb, m)
+                      for _ in range(20000)])
+    assert draws.mean() == pytest.approx(
+        m.cold_latency_s(ALLOC.mem_mb) * COLD_JITTER_MEAN, rel=5e-3)
+
+
+def test_router_estimate_prices_residual_pull():
+    """Estimate mode sees 'far-but-layers-resident': the cold estimate
+    rises by the candidate's residual pull when it dominates the
+    classic curve, and affinity placement steers to the warmed node."""
+    from repro.core.router import Router
+    machine = MachineType(physical_cores=32, vcpus=32, mem_mb=16 * 1024,
+                          registry_gbps=0.5)
+    cluster = Cluster(n_workers=1, vcpus_per_worker=32,
+                      mem_mb_per_worker=16 * 1024, vcpu_limit=32,
+                      machines=(machine,))
+    cat = default_images(["f"])
+    w = cluster.workers[0]
+    w.image_cache = NodeImageCache(100_000, 0.5)
+    sched = ShabariScheduler(cluster, image_resolver=cat.__getitem__)
+    r = Router([cluster], [sched], routing="estimate",
+               image_resolver=cat.__getitem__)
+    est_cold_cache, kind, _ = r._estimate(0, "f", ALLOC, 0.0)
+    assert kind == "cold"
+    blind = Router([cluster], [ShabariScheduler(cluster)],
+                   routing="estimate")
+    est_blind, _, _ = blind._estimate(0, "f", ALLOC, 0.0)
+    pull = w.image_cache.residual_pull_s(cat["f"])
+    classic = machine.cold_latency_s(ALLOC.mem_mb) * COLD_JITTER_MEAN
+    assert pull > classic  # 0.5 Gbps: the pull dominates
+    assert est_cold_cache - est_blind == pytest.approx(pull - classic)
+    # once the layers are resident the cache-aware estimate collapses
+    # back to the classic priced curve
+    w.image_cache.pull(cat["f"])
+    est_warm_cache, _, _ = r._estimate(0, "f", ALLOC, 0.0)
+    assert est_warm_cache == pytest.approx(est_blind)

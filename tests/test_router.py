@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.allocator import Allocation
 from repro.core.cluster import Cluster
-from repro.core.fleet import MachineType
+from repro.core.fleet import COLD_JITTER_MEAN, MachineType
 from repro.core.router import DEFAULT_EXEC_ESTIMATE_S, Router
 from repro.core.scheduler import ShabariScheduler
 from repro.serving.experiment import run_scenario
@@ -41,8 +41,10 @@ def _mk(n_clusters=2, routing="spill-over", n_workers=2, seed=0,
 
 def _cold_estimate(clusters, alloc):
     """Mean-field cold-start latency on these (uniform) test fleets —
-    the per-machine curve the router now prices."""
-    return clusters[0].workers[0].machine.cold_latency_s(alloc.mem_mb)
+    the per-machine curve scaled by the lognormal jitter's expectation,
+    exactly what the router prices."""
+    return (clusters[0].workers[0].machine.cold_latency_s(alloc.mem_mb)
+            * COLD_JITTER_MEAN)
 
 
 def _saturate(cluster):
