@@ -1,0 +1,200 @@
+"""Slack-aware vs slack-blind chain scheduling A/B.
+
+Both chain scenarios run under the full chain stack — estimate routing
+scored against the remaining end-to-end budget, SLO-native admission
+with the warm-hold fork, and Fifer pre-warm — with ONLY the slack
+decomposition flipped between arms:
+
+* ``aware``   — per-stage allowance = remaining e2e budget minus the
+  longest expected path below the stage (critical-path analysis): a
+  slack-rich stage tolerates a local cold start or a front-door hold,
+  a critical-path stage gets exactly what the chain can still afford;
+* ``uniform`` — the slack-blind baseline: the e2e SLO split evenly
+  over the chain's depth, measured per stage, no routing budget.
+
+Every cell is the MEAN over a fixed seed panel: a single heavy-tailed
+trace is dominated by where its few giant inputs happen to land, so a
+one-seed comparison measures the seed, not the scheduler. The panel is
+deterministic, so the gates are exact, not statistical.
+
+Headline CI gates (hard failures, mirroring admission_bench):
+
+* on at least one full-load chain cell, ``aware`` must beat
+  ``uniform`` on mean end-to-end SLO violations
+  (``chain_e2e_viol_pct`` counts late completions AND failed
+  instances against starts);
+* on the half-load control the arms' overall per-invocation
+  ``slo_violation_pct`` must agree within 0.5 pt — with headroom,
+  slack awareness must not distort ordinary SLO outcomes to buy its
+  chain wins.
+
+  PYTHONPATH=src python -m benchmarks.chain_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.util import QUICK, emit
+from repro.serving import baselines as B
+from repro.serving.chains import default_chains
+from repro.serving.experiment import make_policy
+from repro.serving.profiles import build_input_pool, build_profiles
+from repro.serving.simulator import SimConfig, Simulator, summarize
+from repro.serving.workload import ScenarioSpec, generate_scenario
+
+DURATION_S = 240.0 if QUICK else 360.0
+RPS = 4.0
+POLICY = "shabari"
+SEEDS = tuple(range(5))
+
+# (scenario, chain key, rps scale): the two full-load chain cells the
+# dominance gate quantifies over, plus the half-load neutrality control
+CELLS = (
+    ("chain-pipeline", "pipeline", 1.0),
+    ("fan-out-join", "fanout", 1.0),
+    ("chain-pipeline@half", "pipeline", 0.5),
+)
+ARMS = ("aware", "uniform")
+
+MEAN_KEYS = ("chain_e2e_viol_pct", "chain_e2e_p50_s", "chain_e2e_p99_s",
+             "chain_failed", "chain_started", "slo_violation_pct",
+             "shed_pct", "admission_slo_held")
+
+
+def _cfg(chain_key: str, slack: str) -> SimConfig:
+    # 8 x 32-vCPU workers: big enough that Poisson bursts average out
+    # at half load (the neutrality control needs genuine headroom),
+    # small enough that full load genuinely contends
+    return SimConfig(
+        n_workers=8,
+        vcpus_per_worker=32,
+        physical_cores=32,
+        mem_mb_per_worker=16 * 1024,
+        vcpu_limit=32,
+        retry_interval_s=1.0,
+        queue_timeout_s=45.0,
+        seed=0,
+        routing="estimate",
+        admission="slo",
+        chains=(default_chains()[chain_key],),
+        chain_slack=slack,
+    )
+
+
+def _run_once(trace, profiles, pool, slo_table, chain_key, slack):
+    policy = make_policy(POLICY, profiles, pool, slo_table, seed=0)
+    sim = Simulator(policy=policy, profiles=profiles, input_pool=pool,
+                    slo_table=slo_table, cfg=_cfg(chain_key, slack))
+    t0 = time.perf_counter()
+    results = sim.run(trace)
+    wall = time.perf_counter() - t0
+    summary = summarize(results)
+    summary.update(sim.chain_summary())
+    summary["admission_slo_held"] = float(sim.router.admission_slo_held)
+    return summary, sim.events_processed, wall
+
+
+def run() -> None:
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo_table = B.build_slo_table(profiles, pool)
+    functions = sorted(profiles)
+    inputs_per_function = {f: len(pool[f]) for f in profiles}
+
+    def trace_for(name, rps_scale, seed):
+        spec = ScenarioSpec(scenario=name.split("@")[0],
+                            rps=RPS * rps_scale, duration_s=DURATION_S,
+                            seed=seed)
+        return generate_scenario(spec, functions=functions,
+                                 inputs_per_function=inputs_per_function)
+
+    # throwaway warmup so first-touch compile/caching isn't charged to
+    # the first timed cell
+    warm_trace = trace_for(CELLS[0][0], CELLS[0][2], SEEDS[0])
+    _run_once(warm_trace[: max(len(warm_trace) // 4, 1)],
+              profiles, pool, slo_table, CELLS[0][1], "aware")
+
+    cells = {}
+    for name, chain_key, rps_scale in CELLS:
+        for slack in ARMS:
+            acc = {k: 0.0 for k in MEAN_KEYS}
+            events = wall = 0.0
+            n = 0
+            for seed in SEEDS:
+                trace = trace_for(name, rps_scale, seed)
+                summary, ev, w = _run_once(
+                    trace, profiles, pool, slo_table, chain_key, slack)
+                for k in MEAN_KEYS:
+                    acc[k] += summary[k]
+                events += ev
+                wall += w
+                n += len(trace)
+            mean = {k: v / len(SEEDS) for k, v in acc.items()}
+            cells[(name, slack)] = mean
+            eps = events / wall
+            emit(
+                f"chain_bench.{name}.{slack}",
+                1e6 / max(eps, 1e-9),
+                f"n={n}"
+                f"|seeds={len(SEEDS)}"
+                f"|events_per_sec={eps:.0f}"
+                f"|chain_e2e_viol_pct={mean['chain_e2e_viol_pct']:.2f}"
+                f"|chain_e2e_p50_s={mean['chain_e2e_p50_s']:.3f}"
+                f"|chain_e2e_p99_s={mean['chain_e2e_p99_s']:.3f}"
+                f"|chain_failed={mean['chain_failed']:.1f}"
+                f"|chain_started={mean['chain_started']:.1f}"
+                f"|slo_viol_pct={mean['slo_violation_pct']:.2f}"
+                f"|shed_pct={mean['shed_pct']:.2f}"
+                f"|held={mean['admission_slo_held']:.1f}",
+            )
+
+    for name, _, _ in CELLS:
+        aware, uni = cells[(name, "aware")], cells[(name, "uniform")]
+        emit(
+            f"chain_bench.{name}.aware_delta",
+            0.0,
+            f"e2e_viol_pts="
+            f"{aware['chain_e2e_viol_pct'] - uni['chain_e2e_viol_pct']:+.2f}"
+            f"|slo_viol_pts="
+            f"{aware['slo_violation_pct'] - uni['slo_violation_pct']:+.2f}"
+            f"|e2e_p99_delta_s="
+            f"{aware['chain_e2e_p99_s'] - uni['chain_e2e_p99_s']:+.3f}",
+        )
+
+    # CI gate 1: slack awareness must WIN somewhere it has slack to
+    # spend — strictly fewer mean end-to-end violations on >= 1 loaded
+    # cell
+    loaded = [name for name, _, scale in CELLS if scale >= 1.0]
+    won = [
+        name for name in loaded
+        if (cells[(name, "aware")]["chain_e2e_viol_pct"]
+            < cells[(name, "uniform")]["chain_e2e_viol_pct"] - 1e-9)
+    ]
+    if not won:
+        raise RuntimeError(
+            "slack-aware chain scheduling failed to beat the uniform "
+            "SLO split on mean end-to-end violations on any loaded "
+            "cell: " + ", ".join(
+                f"{name}: aware "
+                f"{cells[(name, 'aware')]['chain_e2e_viol_pct']:.2f}% vs "
+                f"uniform "
+                f"{cells[(name, 'uniform')]['chain_e2e_viol_pct']:.2f}%"
+                for name in loaded))
+    # CI gate 2: per-invocation SLO neutrality on the half-load
+    # control (+-0.5 pt)
+    control = "chain-pipeline@half"
+    gap = (cells[(control, "aware")]["slo_violation_pct"]
+           - cells[(control, "uniform")]["slo_violation_pct"])
+    if abs(gap) > 0.5:
+        raise RuntimeError(
+            "slack-aware scheduling is not SLO-neutral on the half-load "
+            f"control: aware-uniform gap {gap:+.2f} pts "
+            f"(aware {cells[(control, 'aware')]['slo_violation_pct']:.2f}%"
+            f" vs uniform "
+            f"{cells[(control, 'uniform')]['slo_violation_pct']:.2f}%)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

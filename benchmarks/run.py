@@ -46,6 +46,7 @@ MODULES = [
     ("sim_bench", "benchmarks.sim_bench"),
     ("router_bench", "benchmarks.router_bench"),
     ("admission_bench", "benchmarks.admission_bench"),
+    ("chain_bench", "benchmarks.chain_bench"),
     ("estimate_bench", "benchmarks.estimate_bench"),
     ("fleet_bench", "benchmarks.fleet_bench"),
     ("registry_bench", "benchmarks.registry_bench"),

@@ -28,6 +28,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.serving.golden import (  # noqa: E402
     CACHE_DISABLED_SCENARIOS,
+    CHAIN_UNIFORM_SCENARIOS,
     ESTIMATE_ROUTING_SCENARIOS,
     GOLDEN_POLICY,
     LEGACY_ACQUIRE_SCENARIOS,
@@ -43,6 +44,7 @@ LEGACY_ENGINE_SUBDIR = "legacy-engine"
 LEGACY_EVENT_LOOP_SUBDIR = "legacy-event-loop"
 ESTIMATE_SUBDIR = "estimate-routing"
 CACHE_DISABLED_SUBDIR = "cache-disabled"
+CHAIN_UNIFORM_SUBDIR = "chain-uniform"
 
 
 def write_snapshot(scenario: str, out_dir: str, *,
@@ -50,7 +52,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
                    legacy_engine: bool = False,
                    estimate_routing: bool = False,
                    legacy_event_loop: bool = False,
-                   cache_disabled: bool = False) -> Dict:
+                   cache_disabled: bool = False,
+                   chain_uniform: bool = False) -> Dict:
     """Run one golden scenario and write its snapshot JSON; returns the
     written document (the schema tests/test_refresh_goldens.py pins)."""
     os.makedirs(out_dir, exist_ok=True)
@@ -62,7 +65,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
                               legacy_engine=legacy_engine,
                               estimate_routing=estimate_routing,
                               legacy_event_loop=legacy_event_loop,
-                              cache_disabled=cache_disabled),
+                              cache_disabled=cache_disabled,
+                              chain_uniform=chain_uniform),
     }
     path = os.path.join(out_dir, f"{scenario}.json")
     with open(path, "w") as f:
@@ -72,7 +76,8 @@ def write_snapshot(scenario: str, out_dir: str, *,
            else " (legacy-engine)" if legacy_engine
            else " (estimate-routing)" if estimate_routing
            else " (legacy-event-loop)" if legacy_event_loop
-           else " (cache-disabled)" if cache_disabled else "")
+           else " (cache-disabled)" if cache_disabled
+           else " (chain-uniform)" if chain_uniform else "")
     print(f"{scenario:>20}{tag}: n={doc['summary']['n']:.0f} "
           f"slo_viol={doc['summary']['slo_violation_pct']:.2f}% -> {path}")
     return doc
@@ -102,6 +107,10 @@ def refresh(out_dir: str = GOLDEN_DIR, only: Optional[set] = None) -> None:
             write_snapshot(
                 scenario, os.path.join(out_dir, CACHE_DISABLED_SUBDIR),
                 cache_disabled=True)
+        if scenario in CHAIN_UNIFORM_SCENARIOS:
+            write_snapshot(
+                scenario, os.path.join(out_dir, CHAIN_UNIFORM_SUBDIR),
+                chain_uniform=True)
 
 
 def main(argv=None) -> None:

@@ -220,6 +220,12 @@ class Router:
         # the admission="slo" slice of admission_shed: invocations whose
         # best completion-time estimate exceeded their SLO budget
         self.admission_slo_shed = 0
+        # slo-mode invocations HELD instead of shed: the contended
+        # estimate said "doomed" but a warm/warming-soon container's
+        # optimistic (contention-free) ECT still fits the remaining
+        # budget, so the arrival waits at the front door for the
+        # contention to drain rather than being irreversibly dropped
+        self.admission_slo_held = 0
         # queue-mode rejections count EVENTS, not arrivals: a held
         # arrival re-enters route() on every retry and increments this
         # each time (the router cannot tell a retry from a new arrival)
@@ -474,11 +480,22 @@ class Router:
 
     def _route_estimate(self, function: str, alloc: Allocation,
                         now: float, features=None,
-                        input_mb: Optional[float] = None) -> RouteDecision:
+                        input_mb: Optional[float] = None,
+                        budget_s: Optional[float] = None) -> RouteDecision:
         """Minimum-ECT routing: score every cluster, bind the winner.
         Ties break toward the home cluster (warm-pool locality is free
         tie insurance), then the lower cluster index — fully
-        deterministic."""
+        deterministic.
+
+        ``budget_s`` (chain stages only) makes the ranking SLACK-AWARE:
+        candidates whose estimate fits the remaining end-to-end budget
+        are ranked home-cluster-first — a stage with slack tolerates a
+        local cold start instead of spilling to a remote warm container,
+        preserving warm pools (and the warm containers themselves) for
+        the stages that have no slack to spend. Candidates over budget
+        keep the pure min-ECT order, so a critical-path stage (nothing
+        fits) degenerates to exactly today's warm-priority behavior.
+        ``budget_s=None`` is bit-identical to the pre-chain ranking."""
         n = len(self.clusters)
         home = self.home_cluster(function)
         best = None
@@ -487,9 +504,12 @@ class Router:
                                                 features, input_mb)
             if kind == "queue":
                 continue
-            key = (est, ci != home, ci)
+            if budget_s is not None and est <= budget_s:
+                key = (0, ci != home, est, ci)
+            else:
+                key = (1, est, ci != home, ci)
             if best is None or key < best[0]:
-                best = (key, ci, kind, payload)
+                best = (key, est, ci, kind, payload)
         if best is None:
             # no cluster can place it — same terminal as spill-over's
             # everything-saturated case; the runtime retries
@@ -498,7 +518,7 @@ class Router:
                 Decision(None, cold_start=False, background_launch=None,
                          queued=True),
             )
-        (est, _, _), ci, kind, payload = best
+        _, est, ci, kind, payload = best
         spilled = ci != home
         if kind == "warming":
             # bind to the still-warming container: the runtime commits
@@ -652,15 +672,56 @@ class Router:
         return (per_input and exec_est > prior
                 and est > slo_s * margin)
 
+    def _warm_hold(self, function: str, alloc: Allocation, now: float,
+                   slo_s: float, features=None,
+                   input_mb: Optional[float] = None) -> bool:
+        """Estimate-aware admission queueing: the contended `_slo_reject`
+        estimate said "shed", but shedding is IRREVERSIBLE while holding
+        is not — a held arrival re-tests on every retry and the
+        non-positive-budget rule still terminates it. So before
+        dropping, check whether ANY warm or warming-soon container
+        could serve the invocation within budget under an OPTIMISTIC
+        (contention-free) estimate: transfer + scheduling overhead +
+        the exec forecast at the candidate machine's speed, plus the
+        residual warm-up for a warming bind. The contended estimate
+        must stay conservative (it gates an irreversible drop); the
+        hold test may be optimistic because the §5 contention that
+        doomed the contended figure is exactly what draining co-runners
+        removes while the arrival waits. No warm capacity anywhere →
+        the shed stands."""
+        exec_est = self._exec_estimate(function, features, input_mb)
+        for ci, sched in enumerate(self.schedulers):
+            xfer = self._transfer_s(function, ci, input_mb)
+            c = sched.warm_candidate(function, alloc.vcpus, alloc.mem_mb,
+                                     now)
+            if c is not None:
+                est = (xfer + self.sched_overhead_s
+                       + exec_est * c.worker.machine.exec_factor)
+                if est <= slo_s:
+                    return True
+            c = self.clusters[ci].warming_soon(
+                function, now, self.estimate_horizon_s,
+                alloc.vcpus, alloc.mem_mb)
+            if c is not None:
+                est = (max(c.warm_at - now, xfer) + self.sched_overhead_s
+                       + exec_est * c.worker.machine.exec_factor)
+                if est <= slo_s:
+                    return True
+        return False
+
     # ------------------------------------------------------------ route
     def route(self, function: str, alloc: Allocation, now: float, *,
               features=None, input_mb: Optional[float] = None,
-              slo_s: Optional[float] = None) -> RouteDecision:
+              slo_s: Optional[float] = None,
+              budget_s: Optional[float] = None) -> RouteDecision:
         """Place one invocation. ``features``/``input_mb`` are the
         invocation's already-computed feature vector + input size (the
         policy's ``aux`` cache) — optional; without them every estimate
         falls back to the per-function EWMA. ``slo_s`` is the remaining
-        SLO budget, read only by ``admission="slo"``."""
+        SLO budget, read only by ``admission="slo"``. ``budget_s`` is a
+        chain stage's remaining end-to-end budget — it makes estimate
+        routing slack-aware (see ``_route_estimate``); None everywhere
+        else."""
         n = len(self.clusters)
         if self.admission == "slo":
             if slo_s is not None and self._slo_reject(
@@ -668,6 +729,12 @@ class Router:
                 home = 0 if n == 1 else self.home_cluster(function)
                 rejected = Decision(None, cold_start=False,
                                     background_launch=None, queued=True)
+                if slo_s > 0.0 and self._warm_hold(
+                        function, alloc, now, slo_s, features, input_mb):
+                    # hold at the front door instead of shedding: the
+                    # runtime retries it like a queued arrival
+                    self.admission_slo_held += 1
+                    return RouteDecision(home, rejected)
                 self.admission_shed += 1
                 self.admission_slo_shed += 1
                 return RouteDecision(home, rejected, shed=True)
@@ -684,7 +751,7 @@ class Router:
             # does NOT degenerate at n == 1: warming-soon binding still
             # short-circuits single-cluster cold starts
             return self._route_estimate(function, alloc, now,
-                                        features, input_mb)
+                                        features, input_mb, budget_s)
         if n == 1:
             d = self.schedulers[0].schedule(function, alloc, now)
             if not d.queued:

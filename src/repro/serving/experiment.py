@@ -83,6 +83,9 @@ class ExperimentResult:
     summary: Dict[str, float]
     results: List[InvocationResult]
     container_sizes: Dict[str, int]
+    # end-to-end chain metrics (Simulator.chain_summary()); None unless
+    # the SimConfig enabled cfg.chains
+    chain_summary: Optional[Dict[str, float]] = None
 
 
 def _run_policy_on_trace(
@@ -124,6 +127,7 @@ def _run_policy_on_trace(
         policy=policy_name, rps=rps, summary=summary,
         results=results if keep_results else [],
         container_sizes=sizes,
+        chain_summary=sim.chain_summary(),
     )
 
 

@@ -21,6 +21,7 @@ from typing import Dict
 
 from repro.core.fleet import ClusterSpec, FleetSpec, Link, MachineType, Topology
 from repro.core.image_cache import ImageCacheSpec
+from repro.serving.chains import default_chains
 from repro.serving.experiment import run_scenario
 from repro.serving.simulator import SimConfig
 from repro.serving.workload import ScenarioSpec, list_scenarios
@@ -72,6 +73,16 @@ ESTIMATE_ROUTING_SCENARIOS = ("multi-cluster",)
 # (cold latencies differ), so the two snapshots are independently
 # regression-tested (tests/test_image_cache.py).
 CACHE_DISABLED_SCENARIOS = ("registry-storm",)
+
+# The chain-slack A/B: chain-pipeline's MAIN golden runs with
+# SimConfig(chain_slack="aware") — per-stage budgets decomposed from
+# the end-to-end SLO via critical-path analysis — and is ALSO
+# snapshotted under tests/goldens/chain-uniform/ with
+# chain_slack="uniform" (flat e2e/depth split per stage). This IS a
+# semantics fork (admission and estimate routing see different
+# budgets), so the two snapshots are independently regression-tested
+# (tests/test_chains.py asserts the pin).
+CHAIN_UNIFORM_SCENARIOS = ("chain-pipeline",)
 
 
 # Heterogeneous-fleet goldens (repro.core.fleet). Both fleets keep the
@@ -127,6 +138,17 @@ _GOLDEN_SIM_OVERRIDES: Dict[str, Dict] = {
     # slow registry downlink, with cache-affinity placement on
     "registry-storm": {"image_cache": ImageCacheSpec(),
                        "fleet": _GOLDEN_REGISTRY_FLEET},
+    # the chain goldens turn the workload dimension on: trigger
+    # arrivals start DAG instances and downstream stages are spawned by
+    # the simulator. chain-pipeline runs the full slack-aware stack
+    # (estimate routing scored against remaining e2e budget + SLO
+    # admission with the warm-hold fork); fan-out-join pins the join
+    # barrier + fan-out pre-warm under estimate routing alone, so the
+    # two goldens localize regressions to different chain subsystems.
+    "chain-pipeline": {"chains": (default_chains()["pipeline"],),
+                       "routing": "estimate", "admission": "slo"},
+    "fan-out-join": {"chains": (default_chains()["fanout"],),
+                     "routing": "estimate"},
 }
 
 
@@ -173,7 +195,8 @@ def run_golden(scenario: str, *, legacy_acquire: bool = False,
                legacy_engine: bool = False,
                estimate_routing: bool = False,
                legacy_event_loop: bool = False,
-               cache_disabled: bool = False) -> Dict[str, float]:
+               cache_disabled: bool = False,
+               chain_uniform: bool = False) -> Dict[str, float]:
     spec = golden_specs()[scenario]
     cfg = golden_sim_config(scenario)
     if legacy_acquire:
@@ -184,5 +207,13 @@ def run_golden(scenario: str, *, legacy_acquire: bool = False,
         cfg = dataclasses.replace(cfg, legacy_event_loop=True)
     if cache_disabled:
         cfg = dataclasses.replace(cfg, image_cache=None)
+    if chain_uniform:
+        cfg = dataclasses.replace(cfg, chain_slack="uniform")
     policy = "shabari-legacy-engine" if legacy_engine else GOLDEN_POLICY
-    return run_scenario(policy, spec, sim_cfg=cfg).summary
+    res = run_scenario(policy, spec, sim_cfg=cfg)
+    summary = res.summary
+    if res.chain_summary is not None:
+        # chain scenarios fold the end-to-end DAG metrics into the
+        # golden (keys are chain_-prefixed, so no collision)
+        summary = {**summary, **res.chain_summary}
+    return summary

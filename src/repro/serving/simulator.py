@@ -217,6 +217,31 @@ class SimConfig:
     # objects, no per-arrival lookups, rng stream untouched — every
     # pre-existing golden is byte-identical.
     image_cache: Optional[ImageCacheSpec] = None
+    # Function-chain/DAG workloads (repro.serving.chains): a tuple of
+    # ChainSpec makes every trace arrival of a spec's trigger function
+    # start a chain instance — upstream completions spawn downstream
+    # stage arrivals (join barriers wait for ALL parents; the child's
+    # input is the pool entry nearest the summed in-edge payloads), and
+    # per-stage SLO budgets come from the chain's END-TO-END SLO
+    # instead of the per-invocation slo_table. The None default is a
+    # zero-overhead fast path (no runtime object, no per-event hooks'
+    # work, rng stream untouched): every pre-existing golden is
+    # byte-identical.
+    chains: Optional[Tuple] = None
+    # How the end-to-end budget decomposes into per-stage allowances:
+    # "aware" (default) reserves the longest expected path below the
+    # stage (critical-path slack analysis) and feeds the remaining
+    # budget to estimate routing as ``budget_s``; "uniform" is the
+    # slack-blind A/B arm — the e2e SLO split evenly over the critical
+    # path's depth, no routing budget (benchmarks/chain_bench).
+    chain_slack: str = "aware"
+    # Fifer-style proactive scaling: when the running stage-N
+    # invocations feeding a stage-N+1 function outnumber its idle
+    # warm+warming containers on its home cluster, launch one
+    # uncommitted warming container (the existing warming-soon index)
+    # sized from the function's last allocation. Read only when
+    # ``chains`` is set.
+    chain_prewarm: bool = True
 
 
 @dataclasses.dataclass(slots=True)
@@ -469,6 +494,16 @@ class Simulator:
                                        np.random.PCG64)
         self._zero_feat = np.zeros(1, np.float32)
         self._run_pool: List[_Running] = []
+        # function chains (repro.serving.chains): None stays a single
+        # is-None check on the hot paths — no runtime, no hooks' work
+        self._chains = None
+        self._chain_iid = None
+        self._chain_alloc: Dict[str, Tuple[int, int]] = {}
+        if self.cfg.chains:
+            from repro.serving.chains import ChainRuntime
+            self._chains = ChainRuntime(
+                self.cfg.chains, self.input_pool,
+                slack=self.cfg.chain_slack)
 
     # ------------------------------------------------------------ events
     def _push(self, t: float, kind: str, payload) -> None:
@@ -564,6 +599,10 @@ class Simulator:
         )
         self.results.append(res)
         self.policy.forget(arrival)
+        if self._chains is not None:
+            # a chain stage that will never run fails its whole chain
+            # (the join barriers below it can never be satisfied)
+            self._chains.on_fail(arrival.invocation_id)
 
     def _on_arrival(self, arrival: Arrival, first_seen: float,
                     alloc=None, aux=None) -> None:
@@ -615,9 +654,22 @@ class Simulator:
         # (queueing already spent counts against it on retries)
         feats, in_mb = self._aux_features(aux)
         slo_s = self.slo_table[(arrival.function, arrival.input_idx)]
+        eff_slo = slo_s - (now - first_seen)
+        budget_s = None
+        if self._chains is not None:
+            # chain stages route against the CHAIN's budget, not the
+            # flat per-invocation SLO: slack-aware mode also hands the
+            # remaining end-to-end allowance to estimate routing as
+            # budget_s (None for non-chain traffic / uniform mode).
+            # The last-seen allocation per function sizes Fifer
+            # pre-warm launches (see _chain_prewarm).
+            stage = self._chains.stage_budget(arrival, now, first_seen)
+            if stage is not None:
+                eff_slo, budget_s = stage
+            self._chain_alloc[arrival.function] = (alloc.vcpus, alloc.mem_mb)
         route = self.router.route(arrival.function, alloc, now,
                                   features=feats, input_mb=in_mb,
-                                  slo_s=slo_s - (now - first_seen))
+                                  slo_s=eff_slo, budget_s=budget_s)
         decision = route.decision
         if route.shed:
             # admission control dropped it at the front door: no retry
@@ -802,6 +854,40 @@ class Simulator:
             self._retime_worker(w, exclude=arrival.invocation_id)
         else:
             self._push(now + exec_s, "finish", (arrival, meta, 0))
+        if self._chains is not None:
+            self._chain_prewarm(arrival.invocation_id)
+
+    def _chain_prewarm(self, iid: int) -> None:
+        """Fifer-style proactive scaling: a chain stage just STARTED, so
+        its children's arrivals are now forecastable. For each child
+        function whose running-parent count exceeds its idle
+        warm+warming supply on its home cluster, launch ONE uncommitted
+        warming container (exactly like a case-2 background launch: it
+        enters ``idle_by_function`` with a future ``warm_at``, i.e. the
+        warming-soon index estimate routing binds to), sized from the
+        function's last-seen allocation. A child function never
+        allocated yet is skipped — sizing it would mean running the
+        policy out-of-band and perturbing its learning state."""
+        counts = self._chains.note_start(iid)
+        if not self.cfg.chain_prewarm:
+            return
+        for child_fn, inflight in counts:
+            size = self._chain_alloc.get(child_fn)
+            if size is None:
+                continue
+            ci = self.router.home_cluster(child_fn)
+            cl = self.clusters[ci]
+            supply = len(cl.idle_by_function.get(child_fn, ()))
+            if supply >= inflight:
+                continue
+            v, m = size
+            w = self.schedulers[ci].cold_candidate(child_fn, v, m)
+            if w is None:
+                continue
+            cl.new_container(
+                w, child_fn, v, m, self.now,
+                warm_at=self.now + self._cold_latency_at(w, child_fn, v, m))
+            self._note_size(child_fn, v, m)
 
     def _retime_worker(self, w: Worker, exclude: int = -1) -> None:
         """Dynamic mode: a co-runner started/finished on ``w`` — advance
@@ -897,6 +983,23 @@ class Simulator:
                                      run.net_gbps,
                                      features=run.features,
                                      input_mb=run.input_mb)
+        if self._chains is not None:
+            ch = self._chains
+            ch.note_end(arrival.invocation_id)
+            if res.oom_killed:
+                ch.on_fail(arrival.invocation_id)
+            else:
+                # spawn every stage whose LAST parent this completion
+                # was: a fresh arrival at t == now, pushed as its own
+                # scheduled-event kind so both event loops route it
+                # through the calendar/heap (the fast loop's retry
+                # deque is arrivals-at-now+interval ONLY — a same-t
+                # arrival push would break its ordering invariant)
+                for inst, stage, fn_c, idx_c in ch.on_complete(
+                        arrival.invocation_id, now):
+                    child = Arrival(next(self._chain_iid), now, fn_c, idx_c)
+                    ch.bind(inst, stage, child.invocation_id, now)
+                    self._push(now, "chain_arrival", child)
         if self.dynamic:
             self._retime_worker(w)  # departures speed co-runners up
         # recycle the bookkeeping record (the result object lives on in
@@ -911,9 +1014,17 @@ class Simulator:
 
     # ------------------------------------------------------------ run
     def run(self, arrivals: List[Arrival]) -> List[InvocationResult]:
+        if self._chains is not None:
+            # spawned stage invocations get ids above the trace's
+            # 0..n-1 block — unique, deterministic, loop-independent
+            self._chain_iid = itertools.count(len(arrivals))
         if self.cfg.legacy_event_loop:
             return self._run_legacy(arrivals)
         return self._run_fast(arrivals)
+
+    def chain_summary(self) -> Optional[Dict[str, float]]:
+        """End-to-end chain metrics, None when ``cfg.chains`` is off."""
+        return None if self._chains is None else self._chains.summary()
 
     def _process_arrival_cohort(self, t: float, payloads: list) -> None:
         """Handle one same-timestamp arrival cohort in event order —
@@ -958,6 +1069,12 @@ class Simulator:
             c.busy = False
             self._start(arrival, meta, alloc, c, cold=False,
                         first_seen=first_seen, aux=aux)
+        elif kind == "chain_arrival":
+            # downstream chain stage spawned by an upstream completion
+            # (repro.serving.chains): a fresh arrival first seen NOW —
+            # it allocates, routes against the chain budget, and
+            # retries like any other arrival from here on
+            self._on_arrival(payload, t, None, None)
         else:  # finish
             arrival, meta, gen = payload
             self._on_finish(arrival, meta, gen)

@@ -472,3 +472,73 @@ def _wan_spill(spec: ScenarioSpec, functions, inputs_per_function, rng):
                            rng)
     return _assemble(times, functions, pop, inputs_per_function, rng,
                      input_weights=input_weights)
+
+
+def _chain_trace(chain_name: str, idx_cap_default: float,
+                 spec: ScenarioSpec, functions, inputs_per_function,
+                 rng: np.random.Generator) -> List[Arrival]:
+    """Shared shape for the chain scenarios: a Poisson TRIGGER stream
+    on the chain's root function plus background Zipf traffic over the
+    remaining functions.
+
+    The trace only carries the trigger arrivals — every downstream
+    stage invocation is SPAWNED by the simulator when its parents
+    complete (``SimConfig.chains``; the golden harness wires
+    ``repro.serving.chains.default_chains()``). Background traffic
+    excludes the trigger function so the chain count is exactly the
+    trigger count, and it keeps the non-chain warm pools busy enough
+    that slack decisions have real competition for capacity.
+
+    params: trigger_frac (fraction of ``spec.rps`` that starts chains,
+    default 0.4), trigger_idx_cap (exclusive upper bound on the trigger
+    input idx — pools sort smallest -> largest and the root stage's
+    expected_s is calibrated to a mid-pool input, so the cap keeps
+    huge-input roots from swamping the critical-path math; per-scenario
+    default).
+    """
+    from repro.serving.chains import chain_trigger, default_chains
+
+    trig = chain_trigger(default_chains()[chain_name])
+    frac = min(max(spec.param("trigger_frac", 0.4), 0.0), 1.0)
+    cap = int(spec.param("trigger_idx_cap", idx_cap_default))
+
+    out: List[Arrival] = []
+    n_inputs = inputs_per_function[trig]
+    hi = max(1, min(cap, n_inputs))
+    for t in _poisson_times(frac * spec.rps, spec.duration_s, rng):
+        idx = int(rng.integers(hi))
+        out.append(Arrival(next(_inv_ids), float(t), trig, idx))
+
+    bg = [f for f in functions if f != trig]
+    if bg:
+        pop = function_popularity(bg, rng)
+        times = _poisson_times((1.0 - frac) * spec.rps, spec.duration_s,
+                               rng)
+        out.extend(_assemble(times, bg, pop, inputs_per_function, rng))
+    return out
+
+
+@register_scenario("chain-pipeline")
+def _chain_pipeline(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Linear 4-stage media-ETL chain (``default_chains()["pipeline"]``:
+    imageprocess -> mobilenet -> resnet50 -> compress) under background
+    Zipf load. The root is imageprocess, whose input pool spans ~0.1s
+    to ~9s of exec — the default idx cap (11 of 14) trims the extreme
+    tail so the e2e SLO (slo_mult x critical path) stays meaningful.
+    params: see ``_chain_trace``."""
+    return _chain_trace("pipeline", 11.0, spec, functions,
+                        inputs_per_function, rng)
+
+
+@register_scenario("fan-out-join")
+def _fan_out_join(spec: ScenarioSpec, functions, inputs_per_function, rng):
+    """Fan-out/fan-in chain (``default_chains()["fanout"]``: qr
+    validates, then thumb/detect/tag run in parallel, and a sentiment
+    digest joins all three) under background Zipf load. The join
+    barrier makes the digest's arrival time the max of three sibling
+    completions, so one slow sibling decides e2e latency — the shape
+    where per-stage slack differs most from a uniform SLO split. qr's
+    pool is uniformly cheap, so no idx cap by default. params: see
+    ``_chain_trace``."""
+    return _chain_trace("fanout", 1e9, spec, functions,
+                        inputs_per_function, rng)

@@ -1,0 +1,404 @@
+"""Function-chain/DAG workload tests (repro.serving.chains).
+
+Pins the critical-path slack decomposition (aware vs uniform budgets),
+the DAG validation (cycles, unreachable stages, multi-root), join
+barriers with summed-payload input resolution, Fifer pre-warm counts
+and the simulator's proactive launch fork, the router's budget-aware
+estimate ranking, the estimate-aware admission hold (warm capacity in
+budget -> queue instead of shed, both directions), and the chain
+golden pins: the chain-uniform snapshot is a REAL semantics fork of
+chain-pipeline's main golden, and the slack-aware arm must not lose
+to the uniform split on end-to-end violations at golden scale.
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core.allocator import Allocation
+from repro.core.cluster import Cluster
+from repro.core.ect import ECT_SHED_OBS
+from repro.core.fleet import MachineType
+from repro.core.router import Router
+from repro.core.scheduler import ShabariScheduler
+from repro.serving import baselines as B
+from repro.serving.chains import (
+    ChainEdge,
+    ChainRuntime,
+    ChainSpec,
+    ChainStage,
+    chain_trigger,
+    default_chains,
+)
+from repro.serving.golden import (
+    CHAIN_UNIFORM_SCENARIOS,
+    golden_sim_config,
+    golden_specs,
+)
+from repro.serving.profiles import build_input_pool, build_profiles, input_size_mb
+from repro.serving.simulator import Simulator
+from repro.serving.workload import Arrival, generate_scenario
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+ALLOC = Allocation(4, 512)
+
+
+@pytest.fixture(scope="module")
+def stack():
+    profiles = build_profiles()
+    pool = build_input_pool(seed=0)
+    slo_table = B.build_slo_table(profiles, pool)
+    return profiles, pool, slo_table
+
+
+def _runtime(pool, which="pipeline", slack="aware"):
+    return ChainRuntime((default_chains()[which],), pool, slack=slack)
+
+
+# ------------------------------------------------------ critical-path math
+def test_pipeline_critical_path_decomposition(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool)
+    comp = rt._compiled[chain_trigger(default_chains()["pipeline"])]
+    # linear chain: cp = sum of stages; every stage is on the path
+    assert comp.cp_total == pytest.approx(1.0 + 2.0 + 3.4 + 1.8)
+    assert comp.depth == 4
+    assert comp.e2e_slo == pytest.approx(1.6 * comp.cp_total)
+    assert comp.cp_after == pytest.approx(
+        {"ingest": 7.2, "detect": 5.2, "classify": 1.8, "archive": 0.0})
+
+
+def test_fanout_critical_path_runs_through_slowest_branch(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool, "fanout")
+    comp = rt._compiled[chain_trigger(default_chains()["fanout"])]
+    # the tag (3.4 s) branch dominates thumb (1.0) and detect (2.0)
+    assert comp.cp_total == pytest.approx(0.15 + 3.4 + 2.1)
+    assert comp.depth == 3
+    # every sibling reserves the same tail (the digest), so the fast
+    # branches inherit the join's slack through a SMALLER cp_after
+    # than their own path would suggest
+    assert comp.cp_after["thumb"] == pytest.approx(2.1)
+    assert comp.cp_after["tag"] == pytest.approx(2.1)
+    assert comp.cp_after["digest"] == pytest.approx(0.0)
+    assert comp.cp_after["validate"] == pytest.approx(5.5)
+
+
+def test_compile_rejects_cycles_unreachable_and_multi_root(stack):
+    _, pool, _ = stack
+    def spec(stages, edges):
+        return ChainSpec(
+            name="bad", stages=stages, edges=edges,
+            expected_s=tuple((s.name, 1.0) for s in stages))
+    two = (ChainStage("a", "qr"), ChainStage("b", "compress"))
+    with pytest.raises(ValueError, match="cycle"):
+        ChainRuntime((spec(
+            two + (ChainStage("c", "sentiment"),),
+            (ChainEdge("a", "b", 1.0), ChainEdge("b", "c", 1.0),
+             ChainEdge("c", "b", 1.0))),), pool)
+    with pytest.raises(AssertionError, match="exactly one root"):
+        ChainRuntime((spec(two, ()),), pool)  # two roots, no edges
+    with pytest.raises(AssertionError, match="duplicate stage"):
+        ChainRuntime((spec(
+            (ChainStage("a", "qr"), ChainStage("a", "compress")),
+            ()),), pool)
+    with pytest.raises(AssertionError):  # dangling edge endpoint
+        ChainRuntime((spec(two, (ChainEdge("a", "nope", 1.0),)),), pool)
+
+
+def test_two_chains_sharing_a_trigger_function_rejected(stack):
+    _, pool, _ = stack
+    p = default_chains()["pipeline"]
+    with pytest.raises(AssertionError, match="share trigger"):
+        ChainRuntime((p, dataclasses.replace(p, name="copy")), pool)
+
+
+# ------------------------------------------------------------ join barrier
+def test_join_barrier_spawns_on_last_parent_only(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool, "fanout")
+    trig = chain_trigger(default_chains()["fanout"])
+    rt.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+    assert rt.started == 1
+    ready = rt.on_complete(0, 1.0)
+    assert [(s, fn) for _, s, fn, _ in ready] == [
+        ("thumb", "imageprocess"), ("detect", "mobilenet"),
+        ("tag", "resnet50")]
+    for iid, (inst, s, _, _) in enumerate(ready, start=100):
+        rt.bind(inst, s, iid, 1.0)
+    # first two siblings finishing spawn NOTHING; the last releases
+    # the digest join
+    assert rt.on_complete(100, 2.0) == []
+    assert rt.on_complete(101, 3.0) == []
+    ready = rt.on_complete(102, 4.5)
+    assert [(s, fn) for _, s, fn, _ in ready] == [("digest", "sentiment")]
+    inst, s, fn, idx = ready[0]
+    # fan-in input resolves to the pool entry nearest the SUMMED
+    # in-edge payloads (0.008 + 0.006 + 0.006 MB)
+    sizes = [input_size_mb(fn, m) for m in pool[fn]]
+    assert idx == min(range(len(sizes)), key=lambda i: abs(sizes[i] - 0.02))
+    rt.bind(inst, s, 103, 4.5)
+    assert rt.completed == 0
+    rt.on_complete(103, 6.0)
+    assert rt.completed == 1 and rt.late == 0
+    assert rt.summary()["chain_e2e_p50_s"] == pytest.approx(6.0)
+
+
+def test_failed_chain_spawns_nothing_and_counts_once(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool)
+    trig = chain_trigger(default_chains()["pipeline"])
+    rt.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+    rt.on_fail(0)
+    rt.on_fail(0)  # e.g. queue timeout then reap race: count once
+    assert rt.failed == 1
+    assert rt.on_complete(0, 1.0) == []  # no downstream spawns
+    s = rt.summary()
+    assert s["chain_e2e_viol_pct"] == pytest.approx(100.0)
+    assert s["chain_completed"] == 0.0
+
+
+# ------------------------------------------------------------------ budgets
+def test_aware_budget_is_remaining_e2e_minus_tail(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool, slack="aware")
+    trig = chain_trigger(default_chains()["pipeline"])
+    e2e = rt._compiled[trig].e2e_slo
+    slo, budget = rt.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+    assert slo == budget == pytest.approx(e2e - 7.2)
+    # 2 s later (a retry): the same stage's allowance shrank by 2 s
+    slo2, _ = rt.stage_budget(Arrival(0, 0.0, trig, 0), 2.0, 0.0)
+    assert slo2 == pytest.approx(slo - 2.0)
+    # bind the classify stage at t=5: it gets everything the chain can
+    # still afford minus the 1.8 s archive tail
+    (inst, _), = [rt._by_iid[0]]
+    rt.bind(inst, "classify", 7, 5.0)
+    slo3, budget3 = rt.stage_budget(Arrival(7, 5.0, "resnet50", 0), 5.0, 5.0)
+    assert slo3 == budget3 == pytest.approx(e2e - 5.0 - 1.8)
+
+
+def test_uniform_budget_splits_evenly_with_no_routing_budget(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool, slack="uniform")
+    trig = chain_trigger(default_chains()["pipeline"])
+    comp = rt._compiled[trig]
+    slo, budget = rt.stage_budget(Arrival(0, 0.0, trig, 0), 1.0, 0.0)
+    assert budget is None  # slack-blind: estimate routing stays min-ECT
+    assert slo == pytest.approx(comp.e2e_slo / comp.depth - 1.0)
+
+
+def test_non_chain_traffic_gets_no_budget(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool)
+    assert rt.stage_budget(Arrival(0, 0.0, "sentiment", 0), 0.0, 0.0) is None
+    assert rt.started == 0
+
+
+# ------------------------------------------------------- pre-warm counts
+def test_note_start_end_track_child_inflight(stack):
+    _, pool, _ = stack
+    rt = _runtime(pool, "fanout")
+    trig = chain_trigger(default_chains()["fanout"])
+    rt.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+    rt.stage_budget(Arrival(1, 0.0, trig, 0), 0.0, 0.0)
+    assert rt.note_start(0) == [
+        ("imageprocess", 1), ("mobilenet", 1), ("resnet50", 1)]
+    assert rt.note_start(1) == [
+        ("imageprocess", 2), ("mobilenet", 2), ("resnet50", 2)]
+    rt.note_end(0)
+    assert rt._inflight["resnet50"] == 1
+    assert rt.note_start(999) == []  # non-chain invocations are inert
+    rt.note_end(999)
+
+
+def _chain_sim(stack, **cfg_overrides):
+    profiles, pool, slo_table = stack
+    cfg = dataclasses.replace(
+        golden_sim_config("chain-pipeline"), **cfg_overrides)
+    pol = B.ShabariPolicy()
+    return Simulator(policy=pol, profiles=profiles, input_pool=pool,
+                     slo_table=slo_table, cfg=cfg)
+
+
+def test_simulator_prewarm_fork_both_ways(stack):
+    """A stage start whose child demand exceeds the idle supply launches
+    ONE uncommitted warming container on the child's home cluster —
+    and launches nothing with chain_prewarm=False."""
+    for prewarm, want in ((True, 1), (False, 0)):
+        sim = _chain_sim(stack, chain_prewarm=prewarm)
+        trig = chain_trigger(default_chains()["pipeline"])
+        sim._chains.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+        sim._chain_alloc["mobilenet"] = (8, 2048)  # last-seen allocation
+        sim._chain_prewarm(0)
+        ci = sim.router.home_cluster("mobilenet")
+        byf = sim.clusters[ci].idle_by_function.get("mobilenet", {})
+        assert len(byf) == want
+        if prewarm:
+            (c,) = byf.values()
+            assert c.vcpus == 8 and c.warm_at > 0.0  # warming, not warm
+            # the supply now covers the in-flight demand: a second
+            # parent start does not stack another container
+            sim._chains.stage_budget(Arrival(1, 0.0, trig, 0), 0.0, 0.0)
+            sim._chain_prewarm(1)
+            assert len(sim.clusters[ci].idle_by_function["mobilenet"]) == 2
+
+
+def test_prewarm_skips_never_allocated_child(stack):
+    sim = _chain_sim(stack)
+    trig = chain_trigger(default_chains()["pipeline"])
+    sim._chains.stage_budget(Arrival(0, 0.0, trig, 0), 0.0, 0.0)
+    sim._chain_prewarm(0)  # no _chain_alloc entry for mobilenet yet
+    ci = sim.router.home_cluster("mobilenet")
+    assert not sim.clusters[ci].idle_by_function.get("mobilenet")
+
+
+# ------------------------------------------- budget-aware estimate ranking
+def _mk(n_clusters=2, n_workers=2, physical_cores=None, **kwargs):
+    machines = None
+    if physical_cores is not None:
+        machines = [MachineType(physical_cores=physical_cores, vcpus=16,
+                                mem_mb=8192)] * n_workers
+    clusters = [
+        Cluster(n_workers=n_workers, vcpus_per_worker=16,
+                mem_mb_per_worker=8192, vcpu_limit=16, machines=machines)
+        for _ in range(n_clusters)
+    ]
+    scheds = [ShabariScheduler(c) for c in clusters]
+    return clusters, Router(clusters, scheds, routing="estimate", **kwargs)
+
+
+def test_budget_ranking_prefers_home_cold_when_it_fits():
+    """With slack to spend, a within-budget home cold start outranks a
+    faster remote warm bind (warm pools are preserved for slack-less
+    stages); without a budget the remote warm container wins min-ECT."""
+    clusters, r = _mk()
+    home = r.home_cluster("f")
+    other = 1 - home
+    w = clusters[other].workers[0]
+    clusters[other].new_container(w, "f", 4, 512, now=0.0, warm_at=0.0)
+
+    rd = r.route("f", ALLOC, 1.0)  # budget_s=None: pure min-ECT
+    assert rd.cluster_idx == other and rd.decision.container is not None
+
+    rd = r.route("f", ALLOC, 1.0, budget_s=1000.0)
+    assert rd.cluster_idx == home
+    assert rd.decision.container is None and rd.decision.cold_start
+
+    # nothing fits a micro-budget -> degrade to exactly min-ECT order
+    rd = r.route("f", ALLOC, 1.0, budget_s=1e-6)
+    assert rd.cluster_idx == other and rd.decision.container is not None
+
+
+# ------------------------------------- estimate-aware admission queueing
+# A worker drowning in co-runner demand (slowdown 38x at the request's
+# 4 vcpus) with a maturely-calibrated 2 s function: the contended
+# fleet-min estimate (~76 s) blows past ECT_BLIND_SHED_BAND x the
+# 2.05 s budget, while the contention-free warm figure (~2.001 s,
+# sched overhead + exec) still fits it.
+_HOLD_SLO = 2.05
+
+
+def _held_setup(warm=True, warming_at=None):
+    clusters, r = _mk(n_clusters=1, n_workers=1, physical_cores=8,
+                      admission="slo")
+    w = clusters[0].workers[0]
+    if warm:
+        clusters[0].new_container(w, "f", 8, 1024, now=0.0, warm_at=0.0)
+    if warming_at is not None:
+        clusters[0].new_container(w, "f", 8, 1024, now=0.0,
+                                  warm_at=warming_at)
+    w.add_active(300.0, 0.0)
+    for _ in range(ECT_SHED_OBS):
+        r.observe_exec("f", 2.0)
+    return clusters, r
+
+
+def test_slo_admission_holds_when_warm_capacity_fits_budget():
+    """The contended estimate says shed but an idle warm container fits
+    contention-free: hold at the front door — queued, NOT shed — and
+    count it."""
+    _, r = _held_setup(warm=True)
+    rd = r.route("f", ALLOC, 0.0, slo_s=_HOLD_SLO)
+    assert not rd.shed and rd.decision.queued
+    assert r.admission_slo_held == 1
+    assert r.admission_slo_shed == 0 and r.admission_shed == 0
+
+
+def test_slo_admission_warming_soon_also_holds():
+    _, r = _held_setup(warm=False, warming_at=0.02)
+    rd = r.route("f", ALLOC, 0.0, slo_s=_HOLD_SLO)
+    assert not rd.shed and rd.decision.queued
+    assert r.admission_slo_held == 1
+
+
+def test_slo_admission_shed_stands_without_warm_capacity():
+    """No warm or warming container anywhere: the shed is final (a cold
+    start can't dodge the contention that doomed the estimate)."""
+    _, r = _held_setup(warm=False)
+    rd = r.route("f", ALLOC, 0.0, slo_s=_HOLD_SLO)
+    assert rd.shed
+    assert r.admission_slo_held == 0 and r.admission_slo_shed == 1
+
+
+def test_slo_admission_hold_terminates_on_exhausted_budget():
+    """A held arrival keeps retrying, so the hold MUST NOT fire once the
+    budget hits zero or the retry loop never ends."""
+    _, r = _held_setup(warm=True)
+    rd = r.route("f", ALLOC, 10.0, slo_s=0.0)
+    assert rd.shed and r.admission_slo_held == 0
+
+
+# ------------------------------------------------------------ golden pins
+def test_chain_goldens_committed_with_chain_metrics():
+    for scenario in ("chain-pipeline", "fan-out-join"):
+        with open(os.path.join(GOLDEN_DIR, f"{scenario}.json")) as f:
+            doc = json.load(f)
+        s = doc["summary"]
+        assert s["chain_started"] > 0
+        assert s["chain_completed"] > 0
+        assert s["chain_stage_spawned"] > 0
+        # spawned stage invocations actually entered the trace totals
+        assert s["n"] > s["chain_started"]
+
+
+def test_chain_uniform_golden_is_a_real_fork():
+    """chain_slack is a semantics fork: the uniform snapshot must share
+    the spec but NOT the summary (identical summaries would mean the
+    A/B arm silently stopped differing)."""
+    for scenario in CHAIN_UNIFORM_SCENARIOS:
+        with open(os.path.join(GOLDEN_DIR, f"{scenario}.json")) as f:
+            main = json.load(f)
+        with open(os.path.join(
+                GOLDEN_DIR, "chain-uniform", f"{scenario}.json")) as f:
+            uni = json.load(f)
+        assert main["spec"] == uni["spec"]
+        assert main["summary"] != uni["summary"]
+        # at golden scale the slack-aware arm must not LOSE to the
+        # uniform split on end-to-end violations (chain_bench gates the
+        # strict win at matrix scale)
+        assert (main["summary"]["chain_e2e_viol_pct"]
+                <= uni["summary"]["chain_e2e_viol_pct"])
+
+
+# ------------------------------------------------------------- scenarios
+def test_chain_scenarios_keep_triggers_out_of_background(stack):
+    """The chain population must be exactly the trigger stream: any
+    background arrival of the trigger function would start a phantom
+    chain."""
+    profiles, pool, _ = stack
+    for scenario, which in (("chain-pipeline", "pipeline"),
+                            ("fan-out-join", "fanout")):
+        spec = golden_specs()[scenario]
+        trig = chain_trigger(default_chains()[which])
+        trace = generate_scenario(
+            spec, functions=sorted(profiles),
+            inputs_per_function={f: len(pool[f]) for f in profiles})
+        trig_arrivals = [a for a in trace if a.function == trig]
+        assert trig_arrivals  # the trigger stream exists...
+        frac = len(trig_arrivals) / len(trace)
+        assert 0.2 < frac < 0.6  # ...at roughly trigger_frac of traffic
+        # ids are the contiguous renumbered block, so chain spawns
+        # (minted at len(trace)+) can never collide
+        assert [a.invocation_id for a in trace] == list(range(len(trace)))

@@ -110,6 +110,41 @@ def test_equal_estimate_routing_warming_binds():
     _assert_field_equal(fast, legacy)
 
 
+def test_equal_registry_storm_image_cache():
+    """Registry-storm with the image cache ON (the PR 8/9 gap): layer
+    pulls, LRU evictions, and cache-affinity placement landed after the
+    event-loop A/B matrix was chosen — per-field equality under
+    legacy_event_loop=True closes it."""
+    spec = golden_specs()["registry-storm"]
+    cfg = golden_sim_config("registry-storm")
+    assert cfg.image_cache is not None  # the golden cell keeps it on
+    sim_f, fast = _run_loop("shabari", spec, cfg, legacy=False)
+    sim_l, legacy = _run_loop("shabari", spec, cfg, legacy=True)
+    assert sim_f.events_processed == sim_l.events_processed
+    # the cache subsystem actually fired: layers were pulled somewhere
+    pulls = sum(w.image_cache.misses
+                for cl in sim_f.clusters for w in cl.workers)
+    assert pulls > 0
+    _assert_field_equal(fast, legacy)
+
+
+def test_equal_chain_pipeline_spawned_arrivals():
+    """Chain cell: downstream stage arrivals are pushed at t == now via
+    the new "chain_arrival" event kind — the fast loop routes them
+    through the calendar queue (NOT the retry FIFO, whose ordering
+    invariant assumes now + retry_interval_s pushes). Both loops must
+    replay identical results AND identical end-to-end chain metrics."""
+    spec = golden_specs()["chain-pipeline"]
+    cfg = golden_sim_config("chain-pipeline")
+    sim_f, fast = _run_loop("shabari", spec, cfg, legacy=False)
+    sim_l, legacy = _run_loop("shabari", spec, cfg, legacy=True)
+    assert sim_f.chain_summary()["chain_stage_spawned"] > 0
+    assert sim_f.chain_summary() == sim_l.chain_summary()
+    fast = sorted(fast, key=lambda r: r.invocation_id)
+    legacy = sorted(legacy, key=lambda r: r.invocation_id)
+    _assert_field_equal(fast, legacy)
+
+
 def test_legacy_event_loop_golden_is_byte_identical():
     """The pinned legacy-event-loop snapshot equals the main golden —
     the two loops are one semantics, not a fork."""
